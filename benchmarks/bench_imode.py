@@ -1,0 +1,31 @@
+"""Paper Fig. 8 / Fig. 9 (finding F5): information modes matter less than
+the netmodel; `mean` costs blevel-gt/ws up to ~25% on duration_stairs."""
+from __future__ import annotations
+
+import collections
+
+from .common import sweep, emit
+
+
+def run(fast=True):
+    graphs = ["crossv", "duration_stairs"] if fast else \
+        ["crossv", "crossvx", "nestedcrossv", "duration_stairs",
+         "size_stairs", "plain1e"]
+    scheds = ["blevel-gt", "ws"] if fast else ["blevel", "blevel-gt",
+                                               "mcp-gt", "dls", "ws"]
+    spec = [dict(graph_name=g, scheduler_name=s, workers=32, cores=4,
+                 bandwidth_mib=128, imode=im)
+            for g in graphs for s in scheds
+            for im in ("exact", "user", "mean")]
+    rows = sweep(spec, reps=2 if fast else 5)
+    emit("imode", rows,
+         lambda r: f"{r['graph']}/{r['scheduler']}/{r['imode']}")
+    acc = collections.defaultdict(list)
+    for r in rows:
+        acc[(r["graph"], r["scheduler"], r["imode"])].append(r["makespan"])
+    for (g, s, im), ms in sorted(acc.items()):
+        base = acc.get((g, s, "exact"))
+        if base and im != "exact":
+            print(f"imode/norm_{g}/{s}/{im},0,"
+                  f"{(sum(ms)/len(ms))/(sum(base)/len(base)):.3f}")
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Fig. 7 (finding F4): minimal scheduling delay has limited effect;
+increasing it can even help (event batching)."""
+from __future__ import annotations
+
+import collections
+
+from .common import sweep, emit
+
+
+def run(fast=True):
+    graphs = ["fastcrossv"] if fast else ["crossv", "fastcrossv",
+                                          "crossvx", "nestedcrossv"]
+    scheds = ["ws", "blevel-gt"] if fast else ["ws", "blevel-gt", "mcp-gt",
+                                               "random"]
+    msds = [0.0, 0.1, 1.6] if fast else [0.0, 0.1, 0.4, 1.6, 6.4]
+    spec = [dict(graph_name=g, scheduler_name=s, workers=32, cores=4,
+                 bandwidth_mib=128, msd=m)
+            for g in graphs for s in scheds for m in msds]
+    rows = sweep(spec, reps=2 if fast else 5)
+    emit("msd", rows, lambda r: f"{r['graph']}/{r['scheduler']}/msd{r['msd']}")
+    acc = collections.defaultdict(list)
+    for r in rows:
+        acc[(r["graph"], r["scheduler"], r["msd"])].append(r["makespan"])
+    for (g, s, m), ms in sorted(acc.items()):
+        base = acc.get((g, s, 0.0))
+        if base and m > 0:
+            print(f"msd/norm_{g}/{s}/msd{m},0,"
+                  f"{(sum(ms)/len(ms))/(sum(base)/len(base)):.3f}")
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 6 / Fig. 12 (finding F1): the `simple` network model can be
+off by up to an order of magnitude vs `max-min` at low bandwidth; the gap
+closes as bandwidth grows."""
+from __future__ import annotations
+
+import collections
+
+from .common import sweep, emit, geomean
+
+
+def run(fast=True):
+    graphs = ["crossv", "gridcat"] if fast else \
+        ["crossv", "crossvx", "fastcrossv", "gridcat", "nestedcrossv",
+         "montage", "cybershake", "ligo"]
+    scheds = ["blevel-gt", "ws"] if fast else \
+        ["blevel", "blevel-gt", "mcp-gt", "ws", "random"]
+    bws = [32, 1024] if fast else [32, 128, 1024, 8192]
+    spec = [dict(graph_name=g, scheduler_name=s, workers=32, cores=4,
+                 bandwidth_mib=bw, netmodel=nm)
+            for g in graphs for s in scheds for bw in bws
+            for nm in ("simple", "maxmin")]
+    rows = sweep(spec, reps=2 if fast else 5)
+    emit("netmodel", rows,
+         lambda r: (f"{r['graph']}/{r['scheduler']}/bw{r['bandwidth_mib']}"
+                    f"/{r['netmodel']}"))
+    acc = collections.defaultdict(list)
+    for r in rows:
+        acc[(r["graph"], r["scheduler"], r["bandwidth_mib"],
+             r["netmodel"])].append(r["makespan"])
+    for (g, s, bw) in sorted({(k[0], k[1], k[2]) for k in acc}):
+        mm = acc.get((g, s, bw, "maxmin"))
+        sm = acc.get((g, s, bw, "simple"))
+        if mm and sm:
+            ratio = (sum(mm) / len(mm)) / (sum(sm) / len(sm))
+            print(f"netmodel/ratio_{g}/{s}/bw{bw},0,{ratio:.3f}")
+    return rows

@@ -1,0 +1,30 @@
+"""Framework bench: scheduler-in-the-loop plan autotuning (the paper's
+technique applied to the LM stack's pipeline plans).  Derived value =
+best-vs-worst simulated makespan ratio (what the autotuner buys)."""
+from __future__ import annotations
+
+import time
+
+from .common import write_csv
+
+
+def run(fast=True):
+    from repro.configs import get_config, SHAPES
+    from repro.planner import autotune
+    rows = []
+    archs = ["qwen3-32b"] if fast else ["qwen3-32b", "mixtral-8x22b",
+                                        "stablelm-12b"]
+    for arch in archs:
+        cfg = get_config(arch)
+        t0 = time.perf_counter()
+        best, ranking = autotune(cfg, SHAPES["train_4k"])
+        dt = time.perf_counter() - t0
+        worst = ranking[-1][0]
+        bestms = ranking[0][0]
+        print(f"planner/{arch}/best={best.name},{dt * 1e6:.0f},"
+              f"{worst / bestms:.3f}")
+        rows.append({"arch": arch, "best": best.name,
+                     "best_s": bestms, "worst_s": worst,
+                     "wall_us": dt * 1e6})
+    write_csv("planner", rows)
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig. 3 / Fig. 11: makespans of all schedulers across graphs,
+clusters and bandwidths (incl. the competitive-random finding F6)."""
+from __future__ import annotations
+
+from .common import sweep, emit
+
+SCHEDULERS = ["blevel", "blevel-gt", "tlevel", "tlevel-gt", "mcp", "mcp-gt",
+              "dls", "etf", "ws", "genetic", "single", "random"]
+
+
+def run(fast=True):
+    graphs = ["crossv", "fork1"] if fast else \
+        ["crossv", "crossvx", "fastcrossv", "gridcat", "nestedcrossv",
+         "fork1", "merge_neighbours", "plain1e"]
+    clusters = [(16, 4)] if fast else [(8, 4), (16, 4), (32, 4), (16, 8),
+                                       (32, 16)]
+    bws = [128] if fast else [32, 128, 1024, 8192]
+    spec = [dict(graph_name=g, scheduler_name=s, workers=w, cores=c,
+                 bandwidth_mib=bw)
+            for g in graphs for s in SCHEDULERS for (w, c) in clusters
+            for bw in bws]
+    rows = sweep(spec, reps=2 if fast else 5)
+    emit("schedulers", rows,
+         lambda r: f"{r['graph']}/{r['scheduler']}/bw{r['bandwidth_mib']}")
+    return rows

@@ -1,0 +1,23 @@
+"""Paper Fig. 5 (finding F3): similar makespans can hide ~2x different
+network traffic (ws vs blevel-gt on nestedcrossv, 32x16 cluster)."""
+from __future__ import annotations
+
+from .common import sweep, emit
+
+
+def run(fast=True):
+    graphs = ["nestedcrossv"] if fast else ["crossv", "crossvx",
+                                            "nestedcrossv", "gridcat"]
+    scheds = ["blevel-gt", "ws", "random", "single"]
+    bws = [128] if fast else [32, 128, 1024]
+    spec = [dict(graph_name=g, scheduler_name=s, workers=32, cores=16,
+                 bandwidth_mib=bw)
+            for g in graphs for s in scheds for bw in bws]
+    rows = sweep(spec, reps=2 if fast else 5)
+    emit("transfers", rows,
+         lambda r: f"{r['graph']}/{r['scheduler']}/bw{r['bandwidth_mib']}")
+    for r in rows:
+        print(f"transfers/xfer_{r['graph']}/{r['scheduler']}"
+              f"/s{r['seed']},{r['wall_us']:.0f},"
+              f"{r['transferred_mib']:.0f}")
+    return rows

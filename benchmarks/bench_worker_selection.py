@@ -1,0 +1,36 @@
+"""Paper Fig. 4 (finding F2): the worker-selection strategy (gt vs the
+earliest-start estimate) matters more than task ordering; -gt variants
+correlate strongly."""
+from __future__ import annotations
+
+from .common import sweep, emit
+
+
+def run(fast=True):
+    graphs = ["crossv"] if fast else ["crossv", "nestedcrossv", "gridcat"]
+    bws = [32, 1024] if fast else [32, 128, 1024, 8192]
+    pairs = ["blevel", "blevel-gt", "tlevel", "tlevel-gt", "mcp", "mcp-gt"]
+    spec = [dict(graph_name=g, scheduler_name=s, workers=16, cores=4,
+                 bandwidth_mib=bw)
+            for g in graphs for s in pairs for bw in bws]
+    rows = sweep(spec, reps=2 if fast else 5)
+    emit("worker_selection", rows,
+         lambda r: f"{r['graph']}/{r['scheduler']}/bw{r['bandwidth_mib']}")
+    # derived: mean gt-vs-base makespan ratio
+    import collections
+    acc = collections.defaultdict(list)
+    for r in rows:
+        acc[(r["graph"], r["scheduler"], r["bandwidth_mib"])].append(
+            r["makespan"])
+    for base in ["blevel", "tlevel", "mcp"]:
+        ratios = []
+        for (g, s, bw), ms in acc.items():
+            if s == base + "-gt":
+                base_ms = acc.get((g, base, bw))
+                if base_ms:
+                    ratios.append((sum(ms) / len(ms))
+                                  / (sum(base_ms) / len(base_ms)))
+        if ratios:
+            print(f"worker_selection/ratio_{base}-gt_vs_{base},0,"
+                  f"{sum(ratios) / len(ratios):.3f}")
+    return rows

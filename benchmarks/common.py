@@ -1,0 +1,73 @@
+"""Shared benchmark harness: sweeps (graph x scheduler x cluster x
+bandwidth x netmodel x imode x msd) through the reference simulator and
+emits ``name,us_per_call,derived`` CSV rows + per-bench CSV files."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+from repro.core import MiB, make_scheduler, Simulator, Worker
+from repro.core.graphs import make_graph
+
+OUT_DIR = os.environ.get("BENCH_OUT", "results/bench")
+
+
+def run_one(graph_name, scheduler_name, workers, cores, bandwidth_mib,
+            netmodel="maxmin", imode="exact", msd=0.1, delay=0.05,
+            seed=0, graph_seed=0):
+    g = make_graph(graph_name, seed=graph_seed)
+    sched = make_scheduler(scheduler_name, seed=seed)
+    ws = [Worker(i, cores) for i in range(workers)]
+    t0 = time.perf_counter()
+    rep = Simulator(g, ws, sched, netmodel=netmodel,
+                    bandwidth=bandwidth_mib * MiB, imode=imode,
+                    msd=msd, decision_delay=delay if msd > 0 else 0.0).run()
+    wall = time.perf_counter() - t0
+    return {
+        "graph": graph_name, "scheduler": scheduler_name,
+        "workers": workers, "cores": cores, "bandwidth_mib": bandwidth_mib,
+        "netmodel": netmodel, "imode": imode, "msd": msd, "seed": seed,
+        "makespan": rep.makespan,
+        "transferred_mib": rep.transferred_bytes / MiB,
+        "invocations": rep.scheduler_invocations,
+        "wall_us": wall * 1e6,
+    }
+
+
+def sweep(rows_spec, reps=3):
+    rows = []
+    for spec in rows_spec:
+        for seed in range(reps):
+            rows.append(run_one(seed=seed, **spec))
+    return rows
+
+
+def write_csv(name, rows):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def emit(name, rows, derive):
+    """Print the required ``name,us_per_call,derived`` lines."""
+    write_csv(name, rows)
+    groups = {}
+    for r in rows:
+        key = derive(r)
+        groups.setdefault(key, []).append(r)
+    for key, rs in sorted(groups.items()):
+        wall = sum(r["wall_us"] for r in rs) / len(rs)
+        mk = sum(r["makespan"] for r in rs) / len(rs)
+        print(f"{name}/{key},{wall:.0f},{mk:.2f}")
+
+
+def geomean(xs):
+    import math
+    xs = [max(x, 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))

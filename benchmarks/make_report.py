@@ -1,0 +1,146 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json.  Usage: PYTHONPATH=src python -m benchmarks.make_report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
+from repro.launch.roofline import PEAK_FLOPS, HBM_BW, LINK_BW
+
+DIR = "results/dryrun"
+
+
+def load(policy="baseline"):
+    recs = {}
+    for f in glob.glob(os.path.join(DIR, "*.json")):
+        r = json.load(open(f))
+        if r.get("policy") != policy:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.2f}ms"
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def memory_floor(cfg, shape):
+    """Analytic minimal HBM traffic per chip per step (lower bound; the
+    HLO 'bytes accessed' is an upper bound that double-counts fused
+    intermediates)."""
+    chips = 256
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if shape.kind == "train":
+        # params r (bf16) + grads w (bf16) + adam m,v r+w (f32) + params w
+        param_traffic = n_total * (2 + 2 + 2 + 4 * 4)
+        act = (cfg.n_layers * shape.global_batch * shape.seq_len
+               * cfg.d_model * 2 * 2)          # saved residuals w+r
+        return (param_traffic + act) / chips
+    if shape.kind == "prefill":
+        cache_w = (cfg.n_layers * shape.global_batch * shape.seq_len
+                   * max(cfg.n_kv_heads, 1) * max(cfg.d_head, 1) * 2 * 2)
+        return (n_active * 2 + cache_w) / chips
+    # decode: read active params + read cache once
+    hk, dh = max(cfg.n_kv_heads, 1), max(cfg.d_head, 1)
+    cache_r = (cfg.n_layers * shape.global_batch
+               * min(shape.seq_len, cfg.max_cache_len or shape.seq_len)
+               * hk * dh * 2 * 2)
+    return (n_active * 2 + cache_r) / chips
+
+
+def dryrun_table(recs):
+    print("| arch | shape | single-pod | multi-pod | bytes/chip (args+temp)"
+          " | HLO collectives/chip | status |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if not shape_applicable(cfg, shape):
+                print(f"| {arch} | {sname} | — | — | — | — |"
+                      f" SKIP (full attention; DESIGN.md §4) |")
+                continue
+            s = recs.get((arch, sname, "single"))
+            m = recs.get((arch, sname, "multi"))
+            if not s or not m:
+                print(f"| {arch} | {sname} | MISSING | | | | |")
+                continue
+            mem = s["memory"]
+            byts = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0))
+            coll = s.get("roofline", {}).get("collective_bytes_per_chip", 0)
+            print(f"| {arch} | {sname} "
+                  f"| ok ({s['compile_s']:.0f}s) | ok ({m['compile_s']:.0f}s) "
+                  f"| {fmt_b(byts)} | {fmt_b(coll)} | ok |")
+
+
+def roofline_table(recs):
+    print("| arch | shape | compute | memory (HLO⌃ / floor⌄) | collective |"
+          " dominant | MODEL/HLO flops | next lever |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if not shape_applicable(cfg, shape):
+                continue
+            s = recs.get((arch, sname, "single"))
+            if not s or "roofline" not in s:
+                continue
+            rf = s["roofline"]
+            import dataclasses as dc
+            c2 = dc.replace(cfg, max_cache_len=shape.seq_len) \
+                if shape.kind == "decode" else cfg
+            floor = memory_floor(c2, shape) / HBM_BW
+            print(f"| {arch} | {sname} | {fmt_s(rf['compute_s'])} "
+                  f"| {fmt_s(rf['memory_s'])} / {fmt_s(floor)} "
+                  f"| {fmt_s(rf['collective_s'])} "
+                  f"| {rf['dominant'].replace('_s', '')} "
+                  f"| {rf['useful_flops_ratio']:.3f} | |")
+
+
+def policy_deltas():
+    """All non-baseline policy runs vs their baselines."""
+    base = load("baseline")
+    rows = []
+    for f in glob.glob(os.path.join(DIR, "*.json")):
+        r = json.load(open(f))
+        if r.get("policy") == "baseline" or not r.get("ok"):
+            continue
+        b = base.get((r["arch"], r["shape"], r["mesh"]))
+        if not b or "roofline" not in r or "roofline" not in b:
+            continue
+        rows.append((r["arch"], r["shape"], r["policy"], b["roofline"],
+                     r["roofline"], b["memory"], r["memory"]))
+    for arch, shape, pol, b, n, bm, nm in sorted(rows):
+        print(f"\n### {arch} x {shape} :: {pol}")
+        for k in ("compute_s", "memory_s", "collective_s"):
+            delta = (n[k] / b[k] - 1) * 100 if b[k] else 0
+            print(f"  {k:13s}: {fmt_s(b[k])} -> {fmt_s(n[k])} "
+                  f"({delta:+.1f}%)")
+        print(f"  useful_ratio : {b['useful_flops_ratio']:.3f} -> "
+              f"{n['useful_flops_ratio']:.3f}")
+        tb = bm.get("temp_size_in_bytes", 0)
+        tn = nm.get("temp_size_in_bytes", 0)
+        print(f"  temp_bytes   : {fmt_b(tb)} -> {fmt_b(tn)}")
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("## §Dry-run (both meshes compile; bytes from memory_analysis)\n")
+    dryrun_table(recs)
+    print("\n## §Roofline (single pod, 256 chips)\n")
+    roofline_table(recs)
+    print("\n## §Policy deltas (hillclimb)\n")
+    policy_deltas()

@@ -1,0 +1,43 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (see each bench module)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow); default is a fast pass")
+    ap.add_argument("--only", default=None,
+                    help="comma list: schedulers,netmodel,msd,imode,"
+                         "transfers,worker_selection,vectorized,kernels,"
+                         "planner")
+    args = ap.parse_args()
+
+    from . import (bench_schedulers, bench_netmodel, bench_msd,
+                   bench_imode, bench_transfers, bench_worker_selection,
+                   bench_vectorized, bench_kernels, bench_planner)
+    benches = {
+        "schedulers": bench_schedulers,         # Fig 3 / Fig 11
+        "worker_selection": bench_worker_selection,   # Fig 4
+        "transfers": bench_transfers,           # Fig 5
+        "netmodel": bench_netmodel,             # Fig 6 / Fig 12
+        "msd": bench_msd,                       # Fig 7
+        "imode": bench_imode,                   # Fig 8 / Fig 9
+        "vectorized": bench_vectorized,         # §6.1 validation analogue
+        "kernels": bench_kernels,               # Pallas kernel sweeps
+        "planner": bench_planner,               # technique-on-LM-plans
+    }
+    only = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    for name in only:
+        t0 = time.time()
+        benches[name].run(fast=not args.full)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+#!/usr/bin/env python
+"""The paper's technique as a first-class framework feature: rank
+pipeline-parallel execution plans of an assigned LM architecture by
+simulated makespan under the max-min network model (DESIGN.md §2).
+
+Also shows why the netmodel matters (paper F1): the `simple` model
+mis-ranks plans whose transfers contend.
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config, SHAPES
+from repro.planner import autotune
+
+
+def main():
+    for arch in ("qwen3-32b", "mixtral-8x22b"):
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        print(f"== {arch} x {shape.name}: candidate pipeline plans ==")
+        best, ranking = autotune(cfg, shape)
+        for ms, plan, rep in ranking[:5]:
+            print(f"  {plan.name:18s} makespan={ms:8.2f}s "
+                  f"transfers={rep.transferred_bytes / 2**30:6.1f}GiB")
+        print(f"  -> autotuned plan: {best.name}")
+        b_simple, rank_simple = autotune(cfg, shape, netmodel="simple")
+        if b_simple.name != best.name:
+            print(f"  !! the `simple` netmodel would have picked "
+                  f"{b_simple.name} (paper F1: simple model misleads)")
+        else:
+            print("  (simple netmodel agrees on this arch)")
+        print()
+
+
+if __name__ == "__main__":
+    main()

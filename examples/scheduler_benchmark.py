@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Mini reproduction of the paper's headline experiments on one graph:
+
+* F1 (Fig 6): the `simple` netmodel under-estimates makespans vs max-min,
+  most at low bandwidth;
+* F6 (Fig 3): `random` is surprisingly competitive at high bandwidth;
+* F4 (Fig 7): MSD has a limited effect.
+
+Full sweeps: ``python -m benchmarks.run --full``.
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import MiB, make_scheduler, run_single_simulation
+from repro.core.graphs import make_graph
+
+
+def avg_makespan(graph, sched, reps=3, **kw):
+    out = []
+    for seed in range(reps):
+        out.append(run_single_simulation(
+            graph, 32, 4, make_scheduler(sched, seed=seed), **kw).makespan)
+    return sum(out) / len(out)
+
+
+def main():
+    g = make_graph("crossv", seed=0)
+    print("== F1: netmodel effect (makespan ratio maxmin/simple) ==")
+    for bw in (32, 128, 1024, 8192):
+        mm = avg_makespan(g, "blevel-gt", netmodel="maxmin",
+                          bandwidth=bw * MiB)
+        sm = avg_makespan(g, "blevel-gt", netmodel="simple",
+                          bandwidth=bw * MiB)
+        print(f"  bw={bw:5d}MiB/s  maxmin={mm:8.1f}s  simple={sm:8.1f}s  "
+              f"ratio={mm / sm:.2f}")
+
+    print("== F6: random vs blevel-gt (ratio ->1 as bandwidth grows) ==")
+    for bw in (32, 1024):
+        r = avg_makespan(g, "random", bandwidth=bw * MiB)
+        b = avg_makespan(g, "blevel-gt", bandwidth=bw * MiB)
+        print(f"  bw={bw:5d}MiB/s  random/blevel-gt = {r / b:.2f}")
+
+    print("== F4: MSD effect (normalised to msd=0) ==")
+    base = avg_makespan(g, "ws", msd=0.0)
+    for msd in (0.1, 1.6, 6.4):
+        m = avg_makespan(g, "ws", msd=msd, decision_delay=0.05)
+        print(f"  msd={msd:3.1f}s  norm_makespan={m / base:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Architecture registry: ``--arch <id>`` selectable configs + input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a (arch x shape) cell — weak-type-correct, shardable, no
+device allocation (the dry-run lowers against these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+from .shapes import SHAPES, SHAPE_NAMES, ShapeSpec, shape_applicable
+
+from . import (hymba_1_5b, llama4_scout_17b_a16e, mixtral_8x22b, gemma3_1b,
+               chatglm3_6b, stablelm_12b, qwen3_32b, llama32_vision_11b,
+               mamba2_130m, musicgen_large)
+
+_MODULES = {
+    "hymba-1.5b": hymba_1_5b,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "mixtral-8x22b": mixtral_8x22b,
+    "gemma3-1b": gemma3_1b,
+    "chatglm3-6b": chatglm3_6b,
+    "stablelm-12b": stablelm_12b,
+    "qwen3-32b": qwen3_32b,
+    "llama-3.2-vision-11b": llama32_vision_11b,
+    "mamba2-130m": mamba2_130m,
+    "musicgen-large": musicgen_large,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    import dataclasses
+    cfg = _MODULES[arch].FULL
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def smoke_config(arch: str, **overrides) -> ModelConfig:
+    import dataclasses
+    cfg = _MODULES[arch].SMOKE
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for the step function of this (arch, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = cfg.activation_dtype
+
+    def tokens(b, s):
+        if cfg.frontend == "audio":
+            return jax.ShapeDtypeStruct((b, s, cfg.codebooks), i32)
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tokens(B, S)}
+        if cfg.frontend == "vision":
+            batch["vision"] = jax.ShapeDtypeStruct(
+                (B, cfg.cross_tokens, cfg.d_model), act)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": tokens(B, S)}
+        if cfg.frontend == "vision":
+            batch["vision"] = jax.ShapeDtypeStruct(
+                (B, cfg.cross_tokens, cfg.d_model), act)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": tokens(B, 1)}
+    raise ValueError(shape.kind)
+
+
+__all__ = ["ARCH_NAMES", "get_config", "smoke_config", "input_specs",
+           "SHAPES", "SHAPE_NAMES", "ShapeSpec", "shape_applicable"]

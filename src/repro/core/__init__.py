@@ -1,0 +1,16 @@
+"""ESTEE-JAX core: task graphs, simulator, schedulers, network models."""
+from .taskgraph import TaskGraph, Task, DataObject, MiB, GiB, merge_graphs
+from .netmodels import (SimpleNetModel, MaxMinFlowNetModel, make_netmodel,
+                        maxmin_fairness, Flow, NETMODELS)
+from .imodes import make_imode, IMODES
+from .worker import Worker, Assignment
+from .simulator import Simulator, Report, run_single_simulation
+from .schedulers import SCHEDULERS, make_scheduler
+
+__all__ = [
+    "TaskGraph", "Task", "DataObject", "MiB", "GiB", "merge_graphs",
+    "SimpleNetModel", "MaxMinFlowNetModel", "make_netmodel",
+    "maxmin_fairness", "Flow", "NETMODELS", "make_imode", "IMODES",
+    "Worker", "Assignment", "Simulator", "Report", "run_single_simulation",
+    "SCHEDULERS", "make_scheduler",
+]

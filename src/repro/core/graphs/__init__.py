@@ -1,0 +1,51 @@
+"""Task graph datasets (paper Table 1) + random graphs for property tests."""
+from __future__ import annotations
+
+import random
+
+from ..taskgraph import TaskGraph, MiB
+from .elementary import ELEMENTARY
+from .irw import IRW
+from .pegasus import PEGASUS
+from .util import finish, tnormal
+
+DATASETS = {"elementary": ELEMENTARY, "irw": IRW, "pegasus": PEGASUS}
+
+GENERATORS = {}
+for _ds in DATASETS.values():
+    GENERATORS.update(_ds)
+
+GRAPH_NAMES = list(GENERATORS)
+
+
+def make_graph(name: str, seed: int = 0) -> TaskGraph:
+    return GENERATORS[name](seed=seed)
+
+
+def dataset_of(name: str) -> str:
+    for ds, gens in DATASETS.items():
+        if name in gens:
+            return ds
+    raise KeyError(name)
+
+
+def random_graph(seed: int, n_tasks: int = 20, edge_p: float = 0.25,
+                 max_cpus: int = 4, multi_output_p: float = 0.3) -> TaskGraph:
+    """Random layered DAG for property-based testing."""
+    rng = random.Random(seed)
+    g = TaskGraph(f"random-{seed}")
+    tasks = []
+    for i in range(n_tasks):
+        n_out = 1 + (rng.random() < multi_output_p)
+        t = g.new_task(tnormal(rng, 30, 20),
+                       outputs=[tnormal(rng, 50, 40) * MiB
+                                for _ in range(n_out)],
+                       cpus=rng.randint(1, max_cpus), name="rnd")
+        # edges only to earlier tasks => acyclic
+        for p in tasks:
+            if rng.random() < edge_p / max(1, len(tasks) ** 0.5):
+                o = rng.choice(p.outputs)
+                if o not in t.inputs:
+                    g.add_dependencies(t, [o])
+        tasks.append(t)
+    return finish(g, seed)

@@ -1,0 +1,36 @@
+"""Scheduler registry (paper §4.3)."""
+from .base import SchedulerBase
+from .list_schedulers import (BlevelScheduler, TlevelScheduler, MCPScheduler,
+                              DLSScheduler, ETFScheduler)
+from .gt import BlevelGTScheduler, TlevelGTScheduler, MCPGTScheduler
+from .others import (SingleScheduler, RandomScheduler, WorkStealingScheduler,
+                     GeneticScheduler)
+from .fixed import FixedScheduler
+from .genetic_vectorized import GeneticVectorizedScheduler
+
+SCHEDULERS = {
+    "blevel": BlevelScheduler,
+    "blevel-gt": BlevelGTScheduler,
+    "tlevel": TlevelScheduler,
+    "tlevel-gt": TlevelGTScheduler,
+    "mcp": MCPScheduler,
+    "mcp-gt": MCPGTScheduler,
+    "dls": DLSScheduler,
+    "etf": ETFScheduler,
+    "genetic": GeneticScheduler,
+    "genetic-vec": GeneticVectorizedScheduler,
+    "ws": WorkStealingScheduler,
+    "single": SingleScheduler,
+    "random": RandomScheduler,
+}
+
+
+def make_scheduler(name: str, seed: int = 0, **kw) -> SchedulerBase:
+    return SCHEDULERS[name](seed=seed, **kw)
+
+
+__all__ = ["SCHEDULERS", "make_scheduler", "SchedulerBase", "FixedScheduler",
+           "BlevelScheduler", "TlevelScheduler", "MCPScheduler",
+           "DLSScheduler", "ETFScheduler", "BlevelGTScheduler",
+           "TlevelGTScheduler", "MCPGTScheduler", "SingleScheduler",
+           "RandomScheduler", "WorkStealingScheduler", "GeneticScheduler"]

@@ -1,0 +1,98 @@
+"""Genetic scheduler with *exact* batched fitness (beyond-paper).
+
+The paper's genetic scheduler scores chromosomes with a cheap makespan
+estimate (uncontended transfers).  Here the whole population is evaluated
+by the vectorized max-min simulator in one ``jax.vmap`` call per
+generation — exact fitness under network contention, at hardware speed
+on TPU.  This is the paper's own use-case (scheduler benchmarking)
+turned inward.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..worker import Assignment
+from .base import SchedulerBase, compute_blevel
+
+
+class GeneticVectorizedScheduler(SchedulerBase):
+    name = "genetic-vec"
+
+    def __init__(self, seed: int = 0, population: int = 32,
+                 generations: int = 16, mutation_rate: float = 0.05,
+                 crossover_rate: float = 0.8, elite: int = 2,
+                 netmodel: str = "maxmin",
+                 bandwidth: float = 100 * 1024 * 1024):
+        super().__init__(seed)
+        self.population = population
+        self.generations = generations
+        self.mutation_rate = mutation_rate
+        self.crossover_rate = crossover_rate
+        self.elite = elite
+        self.netmodel = netmodel
+        self.bandwidth = bandwidth
+
+    def init(self, view):
+        super().init(view)
+        self._assigned = False
+
+    def schedule(self, new_ready, new_finished):
+        if self._assigned:
+            return []
+        self._assigned = True
+        import jax
+        import jax.numpy as jnp
+        from ..vectorized import encode_graph, make_simulator
+
+        view = self.view
+        graph = view.graph
+        workers = list(view.workers)
+        W = len(workers)
+        T = len(graph.tasks)
+        rng = np.random.default_rng(self.rng.randrange(2 ** 31))
+
+        # valid workers per task (enough cores)
+        cores = np.array([w.cores for w in workers], np.int32)
+        valid = np.stack([cores >= t.cpus for t in graph.tasks])   # [T,W]
+        bl = compute_blevel(view)
+        prio = np.array([bl[t] for t in graph.tasks], np.float32)
+
+        spec = encode_graph(graph)
+        run = make_simulator(spec, W, cores, self.netmodel)
+        bw = jnp.float32(self.bandwidth)
+        batch_ms = jax.jit(jax.vmap(
+            lambda a: run(a, jnp.asarray(prio), bandwidth=bw)[0]))
+
+        def sample(n):
+            probs = valid / valid.sum(1, keepdims=True)
+            return np.stack([
+                np.array([rng.choice(W, p=probs[t]) for t in range(T)],
+                         np.int32) for _ in range(n)])
+
+        pop = sample(self.population)
+        fitness = np.asarray(batch_ms(jnp.asarray(pop)))
+        for _ in range(self.generations):
+            order = np.argsort(fitness)
+            pop, fitness = pop[order], fitness[order]
+            nxt = [pop[i] for i in range(self.elite)]
+            while len(nxt) < self.population:
+                # tournament selection
+                i = min(rng.integers(0, self.population, 2))
+                j = min(rng.integers(0, self.population, 2))
+                a, b = pop[i].copy(), pop[j].copy()
+                if T > 1 and rng.random() < self.crossover_rate:
+                    pt = rng.integers(1, T)
+                    a[:pt], b[:pt] = b[:pt].copy(), a[:pt].copy()
+                for c in (a, b):
+                    if len(nxt) >= self.population:
+                        break
+                    mut = rng.random(T) < self.mutation_rate
+                    for t in np.nonzero(mut)[0]:
+                        cand = np.nonzero(valid[t])[0]
+                        c[t] = rng.choice(cand)
+                    nxt.append(c)
+            pop = np.stack(nxt)
+            fitness = np.asarray(batch_ms(jnp.asarray(pop)))
+        best = pop[int(np.argmin(fitness))]
+        return [Assignment(t, workers[int(best[i])], priority=float(prio[i]))
+                for i, t in enumerate(graph.tasks)]

@@ -1,0 +1,6 @@
+"""Vectorized (TPU-native) ESTEE simulator."""
+from .sim import GraphSpec, encode_graph, make_simulator, simulate_batch
+from .waterfill import waterfill, waterfill_simple
+
+__all__ = ["GraphSpec", "encode_graph", "make_simulator", "simulate_batch",
+           "waterfill", "waterfill_simple"]

@@ -1,0 +1,271 @@
+"""Vectorized, fixed-shape discrete-event simulator (TPU-native ESTEE).
+
+Executes a *static* schedule (``task -> worker`` + priorities) of a task
+graph on a simulated cluster under the max-min or simple network model,
+entirely inside ``jax.lax.while_loop`` over dense arrays — so whole batches
+of simulations (GA populations, bandwidth sweeps, seeds) run in parallel
+under ``jax.vmap`` / ``pjit``.
+
+Semantics mirror the reference simulator (``core.simulator``) for static
+schedules with msd=0, decision_delay=0:
+
+* downloads come from the producing worker, deduplicated per
+  (object, destination); slot limits 4/worker + 2/source pair (max-min
+  model) or unlimited (simple model); priorities boosted for ready tasks;
+* the Appendix-A task start rule incl. the priority/blocking guard;
+* max-min progressive filling recomputed at every event.
+
+Dynamic scheduling (ws) and MSD stay on the reference simulator —
+documented scoping in DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .waterfill import waterfill
+
+READY_BOOST = 1_000_000.0
+TIME_EPS = 1e-6
+BYTES_EPS = 1e-3
+NEG = jnp.float32(-3e38)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    """Static structure of a task graph as dense arrays."""
+    durations: np.ndarray      # f32[T]
+    cpus: np.ndarray           # i32[T]
+    sizes: np.ndarray          # f32[O]
+    producer: np.ndarray       # i32[O]
+    edge_task: np.ndarray      # i32[E]  consumer task of each input edge
+    edge_obj: np.ndarray       # i32[E]
+    n_inputs: np.ndarray       # i32[T]
+
+    @property
+    def T(self):
+        return len(self.durations)
+
+    @property
+    def O(self):
+        return len(self.sizes)
+
+    @property
+    def E(self):
+        return len(self.edge_task)
+
+
+def encode_graph(graph) -> GraphSpec:
+    T = graph.task_count
+    O = graph.object_count
+    durations = np.array([t.duration for t in graph.tasks], np.float32)
+    cpus = np.array([t.cpus for t in graph.tasks], np.int32)
+    sizes = np.array([o.size for o in graph.objects], np.float32)
+    producer = np.array([o.parent.id for o in graph.objects], np.int32)
+    et, eo = [], []
+    for t in graph.tasks:
+        for o in t.inputs:
+            et.append(t.id)
+            eo.append(o.id)
+    edge_task = np.array(et, np.int32) if et else np.zeros(0, np.int32)
+    edge_obj = np.array(eo, np.int32) if eo else np.zeros(0, np.int32)
+    n_inputs = np.zeros(T, np.int32)
+    for t in graph.tasks:
+        n_inputs[t.id] = len(t.inputs)
+    return GraphSpec(durations, cpus, sizes, producer, edge_task, edge_obj,
+                     n_inputs)
+
+
+def _pick_per_bucket(bucket, n_buckets, eligible, *keys):
+    """Lexicographic argmax per bucket.  ``keys`` are f32 arrays (higher
+    wins); final tie broken by smallest element index.  Returns bool[F]
+    with at most one True per bucket."""
+    cand = eligible
+    for k in keys:
+        kk = jnp.where(cand, k, NEG)
+        m = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(kk)
+        cand = cand & (kk == m[bucket]) & (m[bucket] > NEG)
+    idx = jnp.arange(bucket.shape[0], dtype=jnp.float32)
+    ii = jnp.where(cand, -idx, NEG)
+    m = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(ii)
+    return cand & (ii == m[bucket])
+
+
+def make_simulator(spec: GraphSpec, n_workers: int, cores,
+                   netmodel: str = "maxmin", flow_rounds: int = 4,
+                   max_steps: int = None):
+    """Returns ``run(assignment, priority, durations, sizes, bandwidth)
+    -> (makespan, transferred_bytes)`` — a pure JAX function.
+
+    ``assignment``: i32[T] worker per task; ``priority``: f32[T]
+    (blocking == priority, the default used by every bundled scheduler).
+    ``durations``/``sizes`` override the spec's (pass spec values normally)
+    so sweeps/imodes/GA can batch them; ``bandwidth`` is a f32 scalar.
+    """
+    T, O, E, W = spec.T, spec.O, spec.E, n_workers
+    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,)).copy()
+    max_cores = int(cores.max())
+    if max_steps is None:
+        max_steps = 4 * (T + E) + 64
+    simple = netmodel == "simple"
+
+    e_task = jnp.asarray(spec.edge_task)
+    e_obj = jnp.asarray(spec.edge_obj)
+    producer = jnp.asarray(spec.producer)
+    n_inputs = jnp.asarray(spec.n_inputs)
+    cpus = jnp.asarray(spec.cpus)
+    cores_j = jnp.asarray(cores)
+
+    def run(assignment, priority, durations=None, sizes=None,
+            bandwidth=jnp.float32(100 * 1024 * 1024)):
+        durations = jnp.asarray(spec.durations if durations is None
+                                else durations, jnp.float32)
+        sizes = jnp.asarray(spec.sizes if sizes is None else sizes,
+                            jnp.float32)
+        bandwidth = jnp.asarray(bandwidth, jnp.float32)
+        assignment = jnp.asarray(assignment, jnp.int32)
+        priority = jnp.asarray(priority, jnp.float32)
+
+        obj_worker = assignment[producer]          # where each obj is born
+        f_dst = assignment[e_task]                 # flow = edge
+        f_src = obj_worker[e_obj]
+        cross = f_src != f_dst
+        # dedup: one flow per (obj, dst); rep = smallest edge idx in bucket
+        key = e_obj * W + f_dst
+        big = jnp.full(O * W, E, jnp.int32)
+        rep_per_key = big.at[key].min(jnp.arange(E, dtype=jnp.int32))
+        rep = rep_per_key[key]                     # i32[E]
+        is_rep = rep == jnp.arange(E, dtype=jnp.int32)
+        needed = cross & is_rep
+        f_bytes = sizes[e_obj]
+        pair = f_src * W + f_dst
+
+        state0 = dict(
+            now=jnp.float32(0.0),
+            t_started=jnp.zeros(T, bool),
+            t_done=jnp.zeros(T, bool),
+            t_finish=jnp.full(T, jnp.inf, jnp.float32),
+            free=cores_j.astype(jnp.int32),
+            f_started=jnp.zeros(E, bool),
+            f_done=jnp.zeros(E, bool),
+            f_rem=f_bytes,
+            steps=jnp.int32(0),
+        )
+
+        def edge_satisfied(st):
+            """input edge e is satisfied at the consumer's worker."""
+            prod_done = st["t_done"][producer[e_obj]]
+            local = prod_done & ~cross
+            moved = st["f_done"][rep] & cross
+            return local | moved
+
+        def task_inputs_produced(st):
+            prod_done = st["t_done"][producer[e_obj]].astype(jnp.int32)
+            cnt = jnp.zeros(T, jnp.int32).at[e_task].add(prod_done)
+            return cnt >= n_inputs
+
+        def start_flows(st):
+            produced = st["t_done"][producer[e_obj]]
+            ready_boost = task_inputs_produced(st)[e_task].astype(jnp.float32)
+            # download priority = max over same (obj,dst) edges
+            raw = priority[e_task] + READY_BOOST * ready_boost
+            mx = jnp.full(O * W, NEG, jnp.float32).at[key].max(raw)
+            f_prio = mx[key]
+            if simple:
+                eligible = needed & ~st["f_started"] & produced
+                st = dict(st, f_started=st["f_started"] | eligible)
+                return st
+            for _ in range(flow_rounds):
+                active = st["f_started"] & ~st["f_done"]
+                af = active.astype(jnp.int32)
+                dcnt = jnp.zeros(W, jnp.int32).at[f_dst].add(af * needed)
+                pcnt = jnp.zeros(W * W, jnp.int32).at[pair].add(af * needed)
+                eligible = (needed & ~st["f_started"] & produced
+                            & (dcnt[f_dst] < 4) & (pcnt[pair] < 2))
+                pick = _pick_per_bucket(f_dst, W, eligible, f_prio)
+                st = dict(st, f_started=st["f_started"] | pick)
+            return st
+
+        def start_tasks(st):
+            sat = edge_satisfied(st).astype(jnp.int32)
+            cnt = jnp.zeros(T, jnp.int32).at[e_task].add(sat)
+            enabled = (cnt >= n_inputs) & ~st["t_started"]
+            for _ in range(max_cores):
+                free_at = st["free"][assignment]
+                waiting = enabled & ~st["t_started"]
+                blocked = waiting & (cpus > free_at)
+                maxblk = jnp.full(W, NEG, jnp.float32).at[assignment].max(
+                    jnp.where(blocked, priority, NEG))
+                cand = (waiting & (cpus <= free_at)
+                        & (priority >= maxblk[assignment]))
+                pick = _pick_per_bucket(assignment, W, cand, priority)
+                st = dict(
+                    st,
+                    t_started=st["t_started"] | pick,
+                    t_finish=jnp.where(pick, st["now"] + durations,
+                                       st["t_finish"]),
+                    free=st["free"] - jnp.zeros(W, jnp.int32)
+                    .at[assignment].add(jnp.where(pick, cpus, 0)),
+                )
+            return st
+
+        def rates_of(st):
+            active = st["f_started"] & ~st["f_done"] & needed
+            if simple:
+                return jnp.where(active, bandwidth, 0.0)
+            caps = jnp.full(W, bandwidth, jnp.float32)
+            return waterfill(f_src, f_dst, active, caps, caps)
+
+        def body(st):
+            st = start_flows(st)
+            st = start_tasks(st)
+            rates = rates_of(st)
+            running = st["t_started"] & ~st["t_done"]
+            t_next = jnp.min(jnp.where(running, st["t_finish"], jnp.inf))
+            active = st["f_started"] & ~st["f_done"] & needed
+            # f32 time resolution: ETAs below the representable step at
+            # `now` are completed immediately (mirrors the reference
+            # simulator's sub-byte remainder rule, scaled for f32).
+            gran = st["now"] * 6e-7 + TIME_EPS
+            f_eta = jnp.where(active & (rates > 0), st["f_rem"] / rates,
+                              jnp.inf)
+            f_eta = jnp.where(f_eta <= gran, 0.0, f_eta)
+            f_next = st["now"] + jnp.min(f_eta, initial=jnp.inf)
+            nxt = jnp.minimum(t_next, f_next)
+            nxt = jnp.maximum(nxt, st["now"])          # never go back
+            dt = jnp.where(jnp.isfinite(nxt), nxt - st["now"], 0.0)
+            now = jnp.where(jnp.isfinite(nxt), nxt, st["now"])
+            f_rem = jnp.where(active, st["f_rem"] - rates * dt, st["f_rem"])
+            f_done = st["f_done"] | (active & (
+                (f_rem <= BYTES_EPS) | (f_rem <= rates * gran)))
+            t_newly = running & (st["t_finish"] <= now + TIME_EPS)
+            free = st["free"] + jnp.zeros(W, jnp.int32).at[assignment].add(
+                jnp.where(t_newly, cpus, 0))
+            return dict(st, now=now, f_rem=f_rem, f_done=f_done,
+                        t_done=st["t_done"] | t_newly, free=free,
+                        steps=st["steps"] + 1)
+
+        def cond(st):
+            return (~jnp.all(st["t_done"])) & (st["steps"] < max_steps)
+
+        st = jax.lax.while_loop(cond, body, state0)
+        makespan = jnp.max(jnp.where(st["t_done"], st["t_finish"], jnp.inf))
+        transferred = jnp.sum(jnp.where(needed & st["f_done"], f_bytes, 0.0))
+        ok = jnp.all(st["t_done"])
+        makespan = jnp.where(ok, makespan, jnp.nan)
+        return makespan, transferred
+
+    return run
+
+
+def simulate_batch(graph, assignments, priorities, n_workers, cores,
+                   netmodel="maxmin", bandwidth=100 * 1024 * 1024.0):
+    """Convenience: vmap over a batch of (assignment, priority)."""
+    spec = encode_graph(graph)
+    run = make_simulator(spec, n_workers, cores, netmodel)
+    fn = jax.jit(jax.vmap(lambda a, p: run(a, p, bandwidth=bandwidth)))
+    return fn(jnp.asarray(assignments), jnp.asarray(priorities))

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (+ jnp oracles) for the perf-critical hot spots."""
+from .ops import attention, ssd, waterfill
+from . import ref
+
+__all__ = ["attention", "ssd", "waterfill", "ref"]

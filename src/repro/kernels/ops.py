@@ -1,0 +1,54 @@
+"""Jit'd public wrappers around the Pallas kernels with XLA fallbacks.
+
+On TPU the Pallas path compiles natively; everywhere else (this CPU
+container, the dry-run's host platform) ``use_pallas=False`` (default)
+routes to the pure-jnp oracle in ``ref.py`` and ``use_pallas=True`` runs
+the kernel in interpret mode — bit-accurate kernel-body semantics for
+tests.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .ssd import ssd_scan as _ssd_pallas
+from .waterfill import waterfill_batch as _waterfill_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=0, scale=None, kv_len=None,
+              use_pallas=False, blk_q=128, blk_k=128):
+    """Flash attention (GQA + sliding window).  See ref.attention_ref.
+
+    ``window`` may be a traced scalar (per-layer window patterns inside
+    ``lax.scan``) and ``kv_len`` a traced valid-prefix length; the Pallas
+    kernel needs both static, so those cases route to the oracle.
+    """
+    if use_pallas and isinstance(window, int) and kv_len is None:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             scale=scale, blk_q=blk_q, blk_k=blk_k,
+                             interpret=not _on_tpu())
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             scale=scale, kv_len=kv_len)
+
+
+def ssd(x, dt, A, B, C, D, *, use_pallas=False, blk_l=64):
+    """Mamba-2 SSD chunked scan.  Oracle: ref.ssd_ref (naive recurrence);
+    the XLA path uses the chunk-parallel dual form (same math, matmuls)."""
+    if use_pallas:
+        return _ssd_pallas(x, dt, A, B, C, D, blk_l=blk_l,
+                           interpret=not _on_tpu())
+    return ref.ssd_chunked(x, dt, A, B, C, D, chunk=blk_l)
+
+
+def waterfill(src, dst, active, caps_up, caps_down, *, use_pallas=False,
+              rounds=None):
+    """Batched max-min fairness rates.  See ref.waterfill_ref."""
+    if use_pallas:
+        return _waterfill_pallas(src, dst, active, caps_up, caps_down,
+                                 rounds=rounds, interpret=not _on_tpu())
+    return ref.waterfill_ref(src, dst, active, caps_up, caps_down)

@@ -1,0 +1,152 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for tests/test_kernels.py (assert_allclose
+against the kernels in interpret mode) and the XLA fallback paths used by
+the model stack on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- attention
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None,
+                  kv_len=None):
+    """Exact softmax attention with GQA + optional sliding window.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; Hq % Hkv == 0.
+    ``window > 0``: query i attends to keys in (i_abs - window, i_abs].
+    ``kv_len``: valid key prefix length (decode caches longer than the
+    written history); queries are the last Sq positions of that prefix.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    valid = Skv if kv_len is None else kv_len
+    q_pos = jnp.arange(Sq)[:, None] + (valid - Sq)
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = k_pos < valid
+    if causal:
+        mask &= k_pos <= q_pos
+    # window may be a python int or a traced scalar (per-layer patterns)
+    w = jnp.asarray(window, jnp.int32)
+    mask &= (w <= 0) | (k_pos > q_pos - w)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ SSD
+def ssd_ref(x, dt, A, B, C, D=None):
+    """Naive Mamba-2 SSD recurrence (single group).
+
+    x:  [Bt, L, H, P]   inputs per head
+    dt: [Bt, L, H]      positive step sizes
+    A:  [H]             negative decay rates
+    B:  [Bt, L, N]      input projections (shared across heads)
+    C:  [Bt, L, N]      output projections
+    D:  [H] or None     skip connection
+    returns y: [Bt, L, H, P]
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t * outer(B_t, x_t);  y_t = C_t @ h_t.
+    """
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp            # [Bt,H,P], [Bt,H], [Bt,N], [Bt,N]
+        decay = jnp.exp(dtt * Af[None, :])            # [Bt,H]
+        h = (h * decay[..., None, None]
+             + jnp.einsum("bn,bh,bhp->bhnp", bt, dtt, xt))
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                        # [Bt,L,H,P]
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, D=None, chunk=64):
+    """Chunk-parallel SSD (the dual/matmul form, pure jnp).
+
+    Mathematically identical to ``ssd_ref`` but structured like the Pallas
+    kernel: intra-chunk work is batched Q x Q matmuls (no sequential
+    scan), inter-chunk states combine via an associative scan — so XLA
+    sees (and cost-counts) the true FLOPs, and the MXU sees matmuls.
+    """
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    xf = x.astype(jnp.float32).reshape(Bt, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bt, nc, Q, H)
+    Bf = B.astype(jnp.float32).reshape(Bt, nc, Q, N)
+    Cf = C.astype(jnp.float32).reshape(Bt, nc, Q, N)
+    Af = A.astype(jnp.float32)
+
+    da = dtf * Af[None, None, None, :]                  # [b,c,q,h]
+    cum = jnp.cumsum(da, axis=2)                        # inclusive
+    total = cum[:, :, -1, :]                            # [b,c,h]
+
+    # intra-chunk: y_i += sum_{j<=i} C_i.B_j exp(cum_i-cum_j) dt_j x_j
+    gamma = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tril = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    gamma = gamma * tril[None, None, :, :, None]        # [b,c,i,j,h]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)
+    xdt = xf * dtf[..., None]                           # [b,c,q,h,p]
+    y = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, gamma, xdt)
+
+    # per-chunk emitted state: S_c = sum_j exp(total-cum_j) B_j (dt x)_j
+    w = jnp.exp(total[:, :, None, :] - cum)             # [b,c,q,h]
+    S = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bf, w, xdt)
+    decay = jnp.exp(total)                              # [b,c,h]
+
+    # inter-chunk: h_in[c] = sum_{c'<c} (prod decays between) S_{c'}
+    def combine(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec_s, S_s = jax.lax.associative_scan(
+        combine, (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(S, 1, 0)))
+    S_incl = jnp.moveaxis(S_s, 0, 1)                    # state AFTER chunk c
+    h_in = jnp.concatenate([jnp.zeros_like(S_incl[:, :1]),
+                            S_incl[:, :-1]], axis=1)    # state BEFORE chunk
+    y = y + jnp.einsum("bcin,bcih,bchnp->bcihp", Cf, jnp.exp(cum), h_in)
+
+    y = y.reshape(Bt, L, H, P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] \
+            * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------ waterfill
+def waterfill_ref(src, dst, active, caps_up, caps_down):
+    """Batched max-min fairness (progressive filling), pure jnp.
+
+    src, dst: i32[B, F]; active: bool[B, F];
+    caps_up, caps_down: f32[B, W].  Returns f32[B, F].
+    """
+    from repro.core.vectorized.waterfill import waterfill
+    fn = jax.vmap(waterfill)
+    return fn(src, dst, active, caps_up, caps_down)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel for the Mamba-2 SSD (state-space duality) chunked
+scan [Dao & Gu, arXiv:2405.21060].
+
+The recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T,  y_t = C_t h_t
+is evaluated chunk-parallel in its dual form: within a chunk of length Q
+the output is a causally-decayed attention-like product (three MXU
+matmuls); across chunks a small state [N, P] is carried in VMEM scratch
+along the sequential chunk grid axis.
+
+This is the TPU-native blocking of the paper's GPU algorithm: Q is chosen
+so the [Q, N] / [Q, P] / [Q, Q] working set fits VMEM and all contractions
+are 128-aligned on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_scr,
+                *, blk_l):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    a = a_ref[0]                                     # scalar (this head)
+    bm = b_ref[0].astype(jnp.float32)                # [Q, N]
+    cm = c_ref[0].astype(jnp.float32)                # [Q, N]
+    d = d_ref[0]
+
+    da = dt * a                                      # [Q]
+    # inclusive cumulative decay via lower-triangular ones matmul (MXU)
+    tril = jnp.tril(jnp.ones((blk_l, blk_l), jnp.float32))
+    cum = jnp.dot(tril, da[:, None],
+                  preferred_element_type=jnp.float32)[:, 0]      # [Q]
+    total = cum[-1]
+
+    # intra-chunk dual (attention-like) term
+    gamma = jnp.exp(cum[:, None] - cum[None, :])     # [Q, Q]
+    gamma = jnp.where(tril > 0, gamma, 0.0)
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32) * gamma
+    xdt = x * dt[:, None]
+    y = jnp.dot(scores, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from carried state
+    y += jnp.dot(cm * jnp.exp(cum)[:, None], state_scr[...],
+                 preferred_element_type=jnp.float32)
+
+    # state update: S' = exp(total) S + sum_i exp(total - cum_i) B_i (dt x)_i
+    w = jnp.exp(total - cum)                          # [Q]
+    state_scr[...] = (jnp.exp(total) * state_scr[...]
+                      + jnp.dot((bm * w[:, None]).T, xdt,
+                                preferred_element_type=jnp.float32))
+
+    y_ref[0, :, 0, :] = (y + d * x).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_l", "interpret"))
+def ssd_scan(x, dt, A, B, C, D, *, blk_l=64, interpret=False):
+    """Chunked SSD scan.
+
+    x: [Bt, L, H, P]; dt: [Bt, L, H]; A, D: [H]; B, C: [Bt, L, N].
+    Returns y: [Bt, L, H, P].  L must be divisible by blk_l.
+    """
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+    blk_l = min(blk_l, L)
+    assert L % blk_l == 0, (L, blk_l)
+    grid = (Bt, H, L // blk_l)
+
+    kernel = functools.partial(_ssd_kernel, blk_l=blk_l)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_l, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, blk_l, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, blk_l, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, blk_l, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_l, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, L, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)

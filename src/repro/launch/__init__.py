@@ -1,0 +1,1 @@
+"""Distributed launch: meshes, dry-run driver, roofline analysis, trainer."""

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+cell on placeholder host devices and record memory/cost/collective
+analysis for the roofline report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch mixtral-8x22b --shape train_4k --mesh both
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>[__<policy>].json.
+The 512-device XLA flag above MUST precede any jax import (jax locks the
+device count at first init) — which is why only this module sets it.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_NAMES, SHAPES, get_config, input_specs,
+                           shape_applicable)
+from repro.models import (abstract_params, make_train_step, make_cache,
+                          make_prefill_step, make_decode_step,
+                          ShardingPolicy, param_pspecs, batch_pspecs,
+                          cache_pspecs, to_shardings)
+from repro.optim import AdamW
+from repro.launch.mesh import make_production_mesh, dp_axes
+from repro.launch import roofline
+
+
+@dataclasses.dataclass
+class Policy:
+    """A sharding/impl policy variant (hillclimbing knob)."""
+    name: str = "baseline"
+    zero3: bool = True
+    seq_axis: str = "model"       # sequence parallelism for residuals
+    remat: str = "full"           # train remat policy
+    grad_compress: bool = False   # bf16 grads before cross-replica reduce
+    window_ring_cache: bool = False
+    moe_dispatch: str = "dense"   # "gather": capacity EP dispatch
+    moe_fold_gates: bool = False  # fold gates into the w2 contraction
+    kv_cache_dtype: str = "none"  # "int8": quantised decode cache
+
+
+POLICIES = {
+    "baseline": Policy(),
+    "nozero3": Policy(name="nozero3", zero3=False),
+    "nosp": Policy(name="nosp", seq_axis=None),
+    "dots": Policy(name="dots", remat="dots"),
+    "gradbf16": Policy(name="gradbf16", grad_compress=True),
+    "ring": Policy(name="ring", window_ring_cache=True),
+    "moegather": Policy(name="moegather", moe_dispatch="gather"),
+    "moefold": Policy(name="moefold", moe_fold_gates=True),
+    "moegather_nozero3": Policy(name="moegather_nozero3",
+                                moe_dispatch="gather", zero3=False),
+    "moefold_gather": Policy(name="moefold_gather", moe_dispatch="gather",
+                             moe_fold_gates=True),
+    "kvint8": Policy(name="kvint8", kv_cache_dtype="int8"),
+    "moegather_gradbf16": Policy(name="moegather_gradbf16",
+                                 moe_dispatch="gather", grad_compress=True),
+    "moegather_dots": Policy(name="moegather_dots", moe_dispatch="gather",
+                             remat="dots"),
+    "ring_kvint8": Policy(name="ring_kvint8", window_ring_cache=True,
+                          kv_cache_dtype="int8"),
+    "dots_gradbf16": Policy(name="dots_gradbf16", remat="dots",
+                            grad_compress=True),
+}
+
+
+def build_cell(arch: str, shape_name: str, mesh, policy: Policy,
+               n_layers=None, unroll=False):
+    """Returns (cfg, shape, jitted_fn, abstract_args) for one cell."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    overrides = {"remat": policy.remat, "unroll_layers": unroll}
+    if n_layers is not None:
+        overrides["n_layers"] = n_layers
+    if cfg.moe_experts and policy.moe_fold_gates:
+        overrides["moe_fold_gates"] = True
+    if cfg.moe_experts and policy.moe_dispatch != "dense":
+        overrides["moe_dispatch"] = policy.moe_dispatch
+        # group-local dispatch aligned with the DP shard count
+        import numpy as _np
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        overrides["moe_groups"] = int(_np.prod(
+            [sizes.get(a, 1) for a in ("pod", "data")]))
+    if shape.kind == "decode":
+        overrides["kv_cache_dtype"] = policy.kv_cache_dtype
+        cache_len = shape.seq_len
+        if policy.window_ring_cache and cfg.window > 0 \
+                and not cfg.global_every and not cfg.swa_all_but:
+            cache_len = min(cache_len, cfg.window)
+            overrides["window_ring_cache"] = True
+        overrides["max_cache_len"] = cache_len
+    cfg = dataclasses.replace(cfg, **overrides)
+
+    dpa = dp_axes(mesh)
+    sp = ShardingPolicy(mesh=mesh, batch_axes=dpa,
+                        seq_axis=policy.seq_axis)
+    p_abs = abstract_params(cfg)
+    p_spec = to_shardings(mesh, param_pspecs(cfg, mesh, p_abs,
+                                             zero3=policy.zero3))
+    batch_abs = input_specs(cfg, shape)
+    b_spec = to_shardings(mesh, batch_pspecs(mesh, batch_abs, dpa))
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4)
+        opt_abs = jax.eval_shape(opt.init, p_abs)
+        o_spec = _opt_specs(cfg, mesh, opt_abs, policy)
+        step = make_train_step(cfg, opt, sp,
+                               grad_compress=policy.grad_compress)
+        fn = jax.jit(step, in_shardings=(p_spec, o_spec, b_spec),
+                     donate_argnums=(0, 1))
+        args = (p_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        c_abs = jax.eval_shape(
+            lambda: make_cache(cfg, shape.global_batch, shape.seq_len))
+        c_spec = to_shardings(mesh, cache_pspecs(cfg, mesh, c_abs, dpa))
+
+        base = make_prefill_step(cfg, sp, cache_len=shape.seq_len)
+        fn = jax.jit(base, in_shardings=(p_spec, b_spec),
+                     out_shardings=(None, c_spec, None))
+        args = (p_abs, batch_abs)
+    else:                                   # decode
+        cache_len = cfg.max_cache_len
+        c_abs = jax.eval_shape(
+            lambda: make_cache(cfg, shape.global_batch, cache_len))
+        c_spec = to_shardings(mesh, cache_pspecs(cfg, mesh, c_abs, dpa))
+        step = make_decode_step(cfg, sp)
+        fn = jax.jit(step, in_shardings=(p_spec, b_spec["tokens"],
+                                         c_spec, None),
+                     out_shardings=(None, c_spec, None),
+                     donate_argnums=(2,))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (p_abs, batch_abs["tokens"], c_abs, pos)
+    return cfg, shape, fn, args
+
+
+def _opt_specs(cfg, mesh, opt_abs, policy):
+    """AdamState sharding: m/v mirror the param specs, step replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m_spec = param_pspecs(cfg, mesh, opt_abs.m, zero3=policy.zero3)
+    v_spec = param_pspecs(cfg, mesh, opt_abs.v, zero3=policy.zero3)
+    import repro.optim.adam as _a
+    return _a.AdamState(
+        step=NamedSharding(mesh, P()),
+        m=to_shardings(mesh, m_spec),
+        v=to_shardings(mesh, v_spec))
+
+
+def _layer_stride(cfg) -> int:
+    """Smallest layer count that tiles the arch's per-layer pattern."""
+    if cfg.cross_attn_every:
+        return cfg.cross_attn_every
+    if cfg.global_every:
+        return cfg.global_every
+    return 1
+
+
+def _compile_cost(arch, shape_name, mesh, policy, n_layers):
+    """Compile an unrolled n_layers variant and return (cost, collectives).
+
+    XLA's cost analysis counts while-loop bodies once, so the full scanned
+    module undercounts by the layer count.  We compile two small unrolled
+    variants and extrapolate linearly (layers are uniform within a
+    pattern stride): total(L) = outside + L * per_layer.
+    """
+    cfg, shape, fn, args = build_cell(arch, shape_name, mesh, policy,
+                                      n_layers=n_layers, unroll=True)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    cost = roofline.cost_dict(compiled)
+    coll = roofline.parse_collectives(compiled.as_text())
+    return ({"flops": float(cost.get("flops", 0.0)),
+             "bytes": float(cost.get("bytes accessed", 0.0)),
+             "coll_bytes": float(coll["total_bytes"]),
+             "coll_count": int(coll["total_count"])})
+
+
+def run_cell(arch, shape_name, mesh_kind, policy, out_dir,
+             with_roofline=True):
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "policy": policy.name, "n_chips": n_chips}
+    try:
+        # 1. full scanned module: sharding-coherence proof + memory fit
+        cfg, shape, fn, args = build_cell(arch, shape_name, mesh, policy)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        rec["memory"] = roofline.memory_stats(compiled)
+        rec["params_total"] = cfg.param_count()
+        rec["params_active"] = cfg.active_param_count()
+        rec["lower_s"] = t_lower - t0
+        rec["compile_s"] = t_compile - t_lower
+        rec["ok"] = True
+
+        # 2. roofline terms via 2-point layer extrapolation (single-pod)
+        if with_roofline:
+            stride = _layer_stride(cfg)
+            n1, n2 = stride, 2 * stride
+            c1 = _compile_cost(arch, shape_name, mesh, policy, n1)
+            c2 = _compile_cost(arch, shape_name, mesh, policy, n2)
+            L = cfg.n_layers
+            per = {k: (c2[k] - c1[k]) / (n2 - n1) for k in c1}
+            tot = {k: c1[k] + per[k] * (L - n1) for k in c1}
+            mf = roofline.model_flops(cfg, shape)
+            rec["roofline"] = roofline.terms_from_totals(
+                flops=tot["flops"], hbm_bytes=tot["bytes"],
+                coll_bytes=tot["coll_bytes"], n_chips=n_chips,
+                model_flops=mf)
+            rec["roofline"]["coll_count_est"] = tot["coll_count"]
+            rec["roofline"]["extrapolation"] = {
+                "n1": n1, "n2": n2, "c1": c1, "c2": c2}
+            rec["roofline_s"] = time.time() - t_compile
+            dom = rec["roofline"]["dominant"]
+        else:
+            dom = "-"
+        print(f"[OK]   {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+              f"{policy.name:10s} compile={rec['compile_s']:6.1f}s "
+              f"dom={dom}")
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+              f"{policy.name:10s}: {rec['error'][:200]}")
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_kind}"
+    if policy.name != "baseline":
+        fname += f"__{policy.name}"
+    with open(os.path.join(out_dir, fname + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--policy", default="baseline")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    policy = POLICIES[args.policy]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not shape_applicable(cfg, SHAPES[shape_name]):
+                print(f"[SKIP] {arch:24s} {shape_name:12s} "
+                      f"(full-attention arch; see DESIGN.md §4)")
+                n_skip += 1
+                continue
+            for mesh_kind in meshes:
+                fname = f"{arch}__{shape_name}__{mesh_kind}"
+                if policy.name != "baseline":
+                    fname += f"__{policy.name}"
+                path = os.path.join(args.out, fname + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            n_ok += 1
+                            continue
+                rec = run_cell(arch, shape_name, mesh_kind, policy,
+                               args.out,
+                               with_roofline=(mesh_kind == "single"))
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"\ndry-run complete: ok={n_ok} fail={n_fail} skipped={n_skip}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,38 @@
+"""Production mesh builders.
+
+A v5e pod is modelled as a (data=16, model=16) mesh of 256 chips; the
+multi-pod dry-run prepends a ``pod`` axis (2 pods = 512 chips).  The
+``pod`` axis generalises to N pods (pure DP across pods by default, so
+elastic scale-down = shrinking one axis + re-lowering).
+
+Functions, not module constants — importing this module never touches
+jax device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"run under dryrun.py (which forces 512 host devices)")
+    devs = np.array(devices[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,162 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s per ICI link.
+
+The compiled module is the per-device SPMD partition, so
+``cost_analysis`` FLOPs/bytes are per-chip; collective bytes parsed from
+the HLO are the per-chip operand footprint of every communication op.
+
+  compute term    = flops_per_chip / peak_flops
+  memory term     = hbm_bytes_per_chip / hbm_bw
+  collective term = collective_bytes_per_chip / link_bw
+
+(equivalent to the global formulation HLO_FLOPs / (chips * peak)).
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-op-kind operand bytes of every collective in the module."""
+    shapes = {}
+    # first pass: output types per instruction name
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, _, _ = m.groups()
+        shapes[name.lstrip("%")] = type_str
+
+    totals = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, _, op, args = m.groups()
+        base = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-start") or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        # operand bytes: look up each %operand's output type
+        nbytes = 0
+        for ref in re.findall(r"%?([\w.\-]+)", args.split("),")[0]):
+            if ref in shapes:
+                nbytes += shape_bytes(shapes[ref])
+        if nbytes == 0:
+            # fall back to the op's own output type
+            nbytes = shape_bytes(m.group(2))
+        totals[base] += nbytes
+        counts[base] += 1
+    return {"bytes_by_op": totals, "counts_by_op": counts,
+            "total_bytes": sum(totals.values()),
+            "total_count": sum(counts.values())}
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:   # backend without memory analysis
+        return {"error": str(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def terms_from_totals(flops: float, hbm_bytes: float, coll_bytes: float,
+                      n_chips: int, model_flops: float = 0.0) -> dict:
+    """Roofline record from per-chip totals (however obtained)."""
+    terms = {"compute_s": flops / PEAK_FLOPS,
+             "memory_s": hbm_bytes / HBM_BW,
+             "collective_s": coll_bytes / LINK_BW}
+    dominant = max(terms, key=terms.get)
+    return {
+        "n_chips": n_chips,
+        "flops_per_chip": flops,
+        "hbm_bytes_per_chip": hbm_bytes,
+        "collective_bytes_per_chip": coll_bytes,
+        **terms,
+        "dominant": dominant,
+        "model_flops_global": model_flops,
+        "hlo_flops_global": flops * n_chips,
+        "useful_flops_ratio": (model_flops / (flops * n_chips)
+                               if flops else 0.0),
+    }
+
+
+def roofline_terms(compiled, hlo_text: str, n_chips: int,
+                   model_flops: float = 0.0) -> dict:
+    cost = cost_dict(compiled)
+    coll = parse_collectives(hlo_text)
+    out = terms_from_totals(
+        flops=float(cost.get("flops", 0.0)),
+        hbm_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(coll["total_bytes"]),
+        n_chips=n_chips, model_flops=model_flops)
+    out["collectives"] = coll
+    out["transcendentals_per_chip"] = float(
+        cost.get("transcendentals", 0.0))
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N·D forward (active params)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,13 @@
+"""Unified model stack for the 10 assigned architectures."""
+from .config import ModelConfig
+from .transformer import (init_params, abstract_params, forward, prefill,
+                          decode_step, make_cache, ShardingPolicy, NO_POLICY)
+from .steps import (make_train_step, make_loss_fn, make_prefill_step,
+                    make_decode_step, softmax_cross_entropy)
+from .params import param_pspecs, batch_pspecs, cache_pspecs, to_shardings
+
+__all__ = ["ModelConfig", "init_params", "abstract_params", "forward",
+           "prefill", "decode_step", "make_cache", "ShardingPolicy",
+           "NO_POLICY", "make_train_step", "make_loss_fn",
+           "make_prefill_step", "make_decode_step", "softmax_cross_entropy",
+           "param_pspecs", "batch_pspecs", "cache_pspecs", "to_shardings"]

@@ -1,0 +1,177 @@
+"""Parameter / batch / cache sharding rules (DP+TP+SP+FSDP+EP).
+
+Baseline policy (hillclimbed variants live in launch/dryrun.py --policy):
+
+* TP over the ``model`` axis: attention heads, FFN hidden, MoE hidden,
+  vocab — with divisibility checks and greedy fallback to other dims
+  (e.g. hymba's 25 heads are not 16-divisible => shard d_model instead).
+* ZeRO-3/FSDP over the ``data`` axis: every weight additionally shards its
+  largest remaining divisible dim over ``data`` (optimizer state mirrors).
+* ``pod`` axis: pure DP for parameters (replicated), batch sharded over
+  (pod, data).
+* Stacked-layer leading dims (scan) are never sharded.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_map_with_path, DictKey
+
+
+def _axis_size(mesh, name):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name, 1)
+
+
+def _leaf_name(path):
+    for entry in reversed(path):
+        if isinstance(entry, DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _path_has(path, key):
+    return any(isinstance(e, DictKey) and str(e.key) == key for e in path)
+
+
+# preferred (model_dim, data_dim) picks by leaf name, indexed from the END
+# of the shape (negative = from the right), None = greedy
+_PREFS = {
+    "embed":    (-2, -1),    # [.., V, D]: vocab->model, D->data
+    "lm_head":  (-1, -2),    # [.., D, V]: vocab->model, D->data
+    "wq":       (-2, -3),    # [.., D, H, dh]: heads->model, D->data
+    "wk":       (-2, -3),
+    "wv":       (-2, -3),
+    "wo":       (-2, -1),    # [.., Hdh, D]
+    "w1":       (-1, -2),    # [.., (E,) D, F]
+    "w3":       (-1, -2),
+    "w2":       (-2, -1),    # [.., (E,) F, D]
+    "in_proj":  (-1, -2),
+    "out_proj": (-2, -1),
+}
+
+
+def _spec_for(shape, name, n_stack, model_size, data_size,
+              model_axis="model", data_axis="data"):
+    """Build a PartitionSpec for one parameter leaf.
+
+    n_stack leading dims are layer-stack dims (unsharded).
+    """
+    nd = len(shape)
+    spec = [None] * nd
+    usable = list(range(n_stack, nd))
+    if not usable:
+        return P(*spec)
+
+    def try_assign(dim, axis, size):
+        if dim is None or size <= 1:
+            return False
+        if dim < 0:
+            dim = nd + dim
+        if dim < n_stack or dim >= nd:
+            return False
+        if spec[dim] is not None or shape[dim] % size != 0 \
+                or shape[dim] < size:
+            return False
+        spec[dim] = axis
+        return True
+
+    pref_m, pref_d = _PREFS.get(name, (None, None))
+    # model axis: preferred dim, else greedy largest divisible
+    if not try_assign(pref_m, model_axis, model_size) and model_size > 1:
+        for dim in sorted(usable, key=lambda i: -shape[i]):
+            if try_assign(dim, model_axis, model_size):
+                break
+    # data axis (ZeRO-3): preferred, else greedy largest remaining
+    if not try_assign(pref_d, data_axis, data_size) and data_size > 1:
+        for dim in sorted(usable, key=lambda i: -shape[i]):
+            if try_assign(dim, data_axis, data_size):
+                break
+    return P(*spec)
+
+
+def param_pspecs(cfg, mesh, params_abstract, zero3=True):
+    model_size = _axis_size(mesh, "model")
+    data_size = _axis_size(mesh, "data") if zero3 else 1
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        n_stack = 0
+        if _path_has(path, "blocks"):
+            n_stack = 1
+        if _path_has(path, "cross_blocks"):
+            n_stack = 1
+        # vision self-blocks reshaped to [G, k-1, ...] happens at use time;
+        # stored params keep a single stack dim.
+        if leaf.ndim <= 1 + n_stack:
+            return P(*([None] * leaf.ndim))
+        return _spec_for(leaf.shape, name, n_stack, model_size, data_size)
+
+    return tree_map_with_path(rule, params_abstract)
+
+
+def batch_pspecs(mesh, batch_abstract, dp_axes):
+    dp = tuple(a for a in dp_axes if _axis_size(mesh, a) > 1)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp])) if dp else 1
+
+    def rule(path, leaf):
+        spec = [None] * leaf.ndim
+        if dp and leaf.ndim >= 1 and leaf.shape[0] % dp_size == 0 \
+                and leaf.shape[0] >= dp_size:
+            spec[0] = dp if len(dp) > 1 else dp[0]
+        return P(*spec)
+
+    return tree_map_with_path(rule, batch_abstract)
+
+
+def cache_pspecs(cfg, mesh, cache_abstract, dp_axes):
+    """KV/SSM cache sharding: batch over DP axes when divisible, else the
+    cache *sequence* over data (long-context decode); heads over model
+    when divisible, else sequence over model."""
+    model_size = _axis_size(mesh, "model")
+    dp = tuple(a for a in dp_axes if _axis_size(mesh, a) > 1)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp])) if dp else 1
+    dp_spec = (dp if len(dp) > 1 else dp[0]) if dp else None
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        spec = [None] * nd
+        # leading stack dims: blocks caches [L, B, ...]; vision self
+        # caches [G, k-1, B, ...]; cross caches [G, B, ...]
+        b_dim = 1
+        while b_dim < nd and leaf.shape[b_dim] <= 64 and b_dim < 2:
+            # heuristic: vision self caches have two stack dims
+            break
+        if _path_has(path, "self"):
+            b_dim = 2
+        batch_ok = dp and leaf.shape[b_dim] % dp_size == 0 \
+            and leaf.shape[b_dim] >= dp_size
+        if name in ("k", "v", "k_scale", "v_scale") and nd >= b_dim + 4:
+            s_dim, h_dim = b_dim + 1, b_dim + 2
+            if batch_ok:
+                spec[b_dim] = dp_spec
+            elif dp and leaf.shape[s_dim] % dp_size == 0:
+                spec[s_dim] = dp_spec
+            if leaf.shape[h_dim] % model_size == 0 \
+                    and leaf.shape[h_dim] >= model_size:
+                spec[h_dim] = "model"
+            elif spec[s_dim] is None and leaf.shape[s_dim] % model_size == 0:
+                spec[s_dim] = "model"
+        elif name in ("state", "conv") and nd >= b_dim + 2:
+            if batch_ok:
+                spec[b_dim] = dp_spec
+            for dim in sorted(range(b_dim + 1, nd), key=lambda i: -leaf.shape[i]):
+                if leaf.shape[dim] % model_size == 0 \
+                        and leaf.shape[dim] >= model_size:
+                    spec[dim] = "model"
+                    break
+        return P(*spec)
+
+    return tree_map_with_path(rule, cache_abstract)
+
+
+def to_shardings(mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

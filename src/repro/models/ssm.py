@@ -1,0 +1,108 @@
+"""Mamba-2 (SSD) block: in_proj -> short depthwise conv -> selective SSD
+-> gated RMSNorm -> out_proj.  [Dao & Gu 2024, arXiv:2405.21060]
+
+Prefill runs the chunked SSD scan (Pallas kernel or jnp oracle); decode
+advances the closed-form single-step recurrence with a carried
+(conv window, ssm state) cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from .layers import rms_norm
+
+
+def ssm_dims(cfg):
+    di = cfg.d_inner
+    ns = cfg.ssm_state
+    nh = cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    assert nh * hd == di, (nh, hd, di)
+    return di, ns, nh, hd
+
+
+def mamba2_block(x, p, cfg, *, cache=None):
+    """x: [B, S, D] -> (y [B, S, D], new_cache).
+
+    cache (decode): dict(conv=[B, K-1, C], state=[B, H, N, P]).
+    p: in_proj [D, 2*di+2*ns+nh], conv_w [K, C], conv_b [C], A_log [H],
+    D [H], dt_bias [H], norm [di], out_proj [di, D]  (C = di + 2*ns).
+    """
+    B, S, D = x.shape
+    di, ns, nh, hd = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    C = di + 2 * ns
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + C], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B,S,H]
+
+    # short depthwise causal conv over (x, B, C) channels
+    if cache is None:
+        pad = jnp.zeros((B, K - 1, C), xbc.dtype)
+        xbc_c = jnp.concatenate([pad, xbc], axis=1)
+        new_conv = xbc_c[:, -(K - 1):, :] if K > 1 else None
+    else:
+        xbc_c = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc],
+                                axis=1)
+        new_conv = xbc_c[:, -(K - 1):, :] if K > 1 else None
+    windows = jnp.stack([xbc_c[:, i:i + S, :] for i in range(K)], axis=2)
+    xbc = jnp.einsum("bskc,kc->bsc", windows, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + ns], axis=-1)
+    xh = xs.reshape(B, S, nh, hd)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [H] < 0
+
+    if cache is None or S > 1:
+        # training forward, or prefill (cache given but empty at pos 0)
+        y = kernels.ssd(xh, dt, A, Bm, Cm, p["D"],
+                        use_pallas=cfg.use_pallas)
+        new_state = None
+        if cache is not None:   # prefill hands the final state to decode
+            new_state = _final_state(xh, dt, A, Bm)
+    else:
+        # single-step recurrence (S == 1)
+        state = cache["state"]                                  # [B,H,N,P]
+        dt1 = dt[:, 0]                                          # [B,H]
+        decay = jnp.exp(dt1 * A[None, :])                       # [B,H]
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                         dt1, xh[:, 0].astype(jnp.float32))
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), state)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] \
+            * xh[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)                          # [B,1,H,P]
+        new_state = state
+
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"]).astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": (new_conv if new_conv is not None
+                              else jnp.zeros((B, 0, C), x.dtype)),
+                     "state": new_state}
+    return out, new_cache
+
+
+def _final_state(xh, dt, A, Bm):
+    """SSM state after the whole sequence (prefill -> decode handoff)."""
+    B, S, H, P = xh.shape
+
+    def step(h, inp):
+        xt, dtt, bt = inp
+        decay = jnp.exp(dtt * A[None, :])
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", bt, dtt, xt)
+        return h, None
+
+    h0 = jnp.zeros((B, H, Bm.shape[-1], P), jnp.float32)
+    xs = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0))
+    h, _ = jax.lax.scan(step, h0, xs)
+    return h

@@ -1,0 +1,93 @@
+"""Train / prefill / decode step builders (the jit roots for the dry-run,
+the trainer and the smoke tests)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import clip_by_global_norm
+from .config import ModelConfig
+from .transformer import (forward, prefill, decode_step, make_cache,
+                          NO_POLICY)
+
+
+def softmax_cross_entropy(logits, labels):
+    """logits [..., V] (any dtype), labels [...] int32 -> mean nll (f32)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, policy=NO_POLICY):
+    def loss_fn(params, batch):
+        logits, _ = forward(params, cfg, batch, policy)
+        tokens = batch["tokens"]
+        if cfg.frontend == "audio":       # tokens [B,S,K], logits [B,S,K,V]
+            labels = tokens[:, 1:, :]
+            lg = logits[:, :-1]
+        else:
+            labels = tokens[:, 1:]
+            lg = logits[:, :-1]
+        return softmax_cross_entropy(lg, labels)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer, policy=NO_POLICY,
+                    accum: int = 1, clip_norm: float = 0.0,
+                    grad_compress: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``accum > 1`` splits the batch into microbatches scanned
+    sequentially (gradient accumulation)."""
+    loss_fn = make_loss_fn(cfg, policy)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def cast(grads):
+        if not grad_compress:
+            return grads
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+    def train_step(params, opt_state, batch):
+        if accum <= 1:
+            loss, grads = grad_fn(params, batch)
+            grads = cast(grads)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                loss, grads = grad_fn(params, mb)
+                grads = cast(grads)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum,
+                    acc, grads)
+                return acc, loss
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, zero, micro_batch)
+            loss = jnp.mean(losses)
+        if clip_norm > 0:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.float32(0)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, policy=NO_POLICY, cache_len=None):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, policy, cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy=NO_POLICY):
+    def serve_step(params, tokens, cache, pos):
+        return decode_step(params, cfg, tokens, cache, pos, policy)
+    return serve_step

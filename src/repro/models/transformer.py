@@ -1,0 +1,390 @@
+"""Unified decoder stack covering all 10 assigned architectures.
+
+One parameter layout + three entry points:
+
+* ``forward(params, cfg, batch)``              — full-sequence logits (train)
+* ``prefill(params, cfg, batch)``              — last-position logits + cache
+* ``decode_step(params, cfg, tokens, cache)``  — one token with a KV cache
+
+Layers are stacked and scanned (``lax.scan``) so the compiled HLO is
+layer-count independent; per-layer variation (local/global windows) rides
+along as scanned arrays.  Vision models interleave one cross-attention
+layer every ``cross_attn_every`` layers via a two-level scan.  An optional
+``ShardingPolicy`` inserts ``with_sharding_constraint`` on the residual
+stream (DP batch sharding + sequence parallelism over the model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import rms_norm, attention_block, swiglu, moe_block
+from .ssm import mamba2_block, ssm_dims
+
+
+# ------------------------------------------------------------- sharding
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Residual-stream constraint policy (mesh=None => no constraints)."""
+    mesh: object = None             # jax.sharding.Mesh
+    batch_axes: tuple = ()          # e.g. ("pod", "data")
+    seq_axis: Optional[str] = None  # e.g. "model" (sequence parallelism)
+
+    def constrain(self, x):
+        if self.mesh is None or x.ndim < 2:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        spec = [None] * x.ndim
+        bsz = int(np.prod([sizes[a] for a in self.batch_axes])) if \
+            self.batch_axes else 1
+        if self.batch_axes and bsz > 1 and x.shape[0] % bsz == 0:
+            spec[0] = (self.batch_axes if len(self.batch_axes) > 1
+                       else self.batch_axes[0])
+        ssz = sizes.get(self.seq_axis, 1) if self.seq_axis else 1
+        if x.ndim >= 3 and ssz > 1 and x.shape[1] % ssz == 0:
+            spec[1] = self.seq_axis
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+
+NO_POLICY = ShardingPolicy()
+
+
+# ------------------------------------------------------------------ init
+def _dense(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_layer(cfg: ModelConfig, key, cross=False):
+    dt = cfg.activation_dtype
+    d = cfg.d_model
+    keys = jax.random.split(key, 16)
+    p = {"ln1": jnp.ones((d,), jnp.float32)}
+    if not cfg.attn_free:
+        hq, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        attn = {
+            "wq": _dense(keys[0], (d, hq, dh), dt),
+            "wk": _dense(keys[1], (d, hk, dh), dt),
+            "wv": _dense(keys[2], (d, hk, dh), dt),
+            "wo": _dense(keys[3], (hq * dh, d), dt),
+        }
+        if cfg.qk_norm:
+            attn["q_norm"] = jnp.ones((dh,), jnp.float32)
+            attn["k_norm"] = jnp.ones((dh,), jnp.float32)
+        if cross:
+            attn["gate"] = jnp.zeros((), jnp.float32)
+        p["attn"] = attn
+    if cfg.ssm in ("mamba2", "hybrid") and not cross:
+        di, ns, nh, hd = ssm_dims(cfg)
+        C = di + 2 * ns
+        p["ssm"] = {
+            "in_proj": _dense(keys[4], (d, 2 * di + 2 * ns + nh), dt),
+            "conv_w": _dense(keys[5], (cfg.ssm_conv, C), jnp.float32, 0.2),
+            "conv_b": jnp.zeros((C,), jnp.float32),
+            "A_log": jnp.zeros((nh,), jnp.float32),
+            "D": jnp.ones((nh,), jnp.float32),
+            "dt_bias": jnp.full((nh,), -4.0, jnp.float32),
+            "norm": jnp.ones((di,), jnp.float32),
+            "out_proj": _dense(keys[6], (di, d), dt),
+        }
+    if cfg.d_ff > 0 and not cross:
+        p["ln2"] = jnp.ones((d,), jnp.float32)
+        if cfg.moe_experts:
+            E, f = cfg.moe_experts, cfg.d_ff
+            p["moe"] = {
+                "router": _dense(keys[7], (d, E), jnp.float32),
+                "w1": _dense(keys[8], (E, d, f), dt),
+                "w3": _dense(keys[9], (E, d, f), dt),
+                "w2": _dense(keys[10], (E, f, d), dt),
+            }
+        else:
+            p["mlp"] = {
+                "w1": _dense(keys[8], (d, cfg.d_ff), dt),
+                "w3": _dense(keys[9], (d, cfg.d_ff), dt),
+                "w2": _dense(keys[10], (cfg.d_ff, d), dt),
+            }
+    return p
+
+
+def n_cross_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.cross_attn_every if cfg.cross_attn_every else 0
+
+
+def init_params(cfg: ModelConfig, key):
+    dt = cfg.activation_dtype
+    d, v = cfg.d_model, cfg.vocab_size
+    k_embed, k_blocks, k_cross, k_head = jax.random.split(key, 4)
+    params = {}
+    if cfg.frontend == "audio":
+        params["embed"] = _dense(k_embed, (cfg.codebooks, v, d), dt)
+    else:
+        params["embed"] = _dense(k_embed, (v, d), dt)
+
+    n_cross = n_cross_layers(cfg)
+    n_self = cfg.n_layers - n_cross
+    bkeys = jax.random.split(k_blocks, n_self)
+    params["blocks"] = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_layer(cfg, bkeys[i]) for i in range(n_self)])
+    if n_cross:
+        ckeys = jax.random.split(k_cross, n_cross)
+        params["cross_blocks"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_layer(cfg, ckeys[i], cross=True) for i in range(n_cross)])
+    params["final_norm"] = jnp.ones((d,), jnp.float32)
+    if not cfg.tie_embeddings:
+        if cfg.frontend == "audio":
+            params["lm_head"] = _dense(k_head, (cfg.codebooks, d, v), dt)
+        else:
+            params["lm_head"] = _dense(k_head, (d, v), dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# -------------------------------------------------------------- blocks
+def self_block(cfg, policy, positions, cache_pos, kv_len,
+               x, p, window, cache):
+    """One decoder layer (attention and/or SSM, then MLP/MoE)."""
+    new_cache = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y = jnp.zeros_like(x)
+    if "attn" in p:
+        ya, kv = attention_block(
+            h, p["attn"], cfg, window=window, positions=positions,
+            cache=None if cache is None else cache.get("kv"),
+            cache_pos=cache_pos, kv_len=kv_len)
+        y = y + ya
+        if kv is not None:
+            new_cache["kv"] = kv
+    if "ssm" in p:
+        ys, sc = mamba2_block(h, p["ssm"], cfg,
+                              cache=None if cache is None
+                              else cache.get("ssm"))
+        y = y + ys
+        if sc is not None:
+            new_cache["ssm"] = sc
+    x = policy.constrain(x + y)
+    if "mlp" in p:
+        x = x + swiglu(rms_norm(x, p["ln2"], cfg.norm_eps), p["mlp"])
+    elif "moe" in p:
+        x = x + moe_block(rms_norm(x, p["ln2"], cfg.norm_eps), p["moe"],
+                          cfg, policy)
+    x = policy.constrain(x)
+    return x, new_cache
+
+
+def cross_block(cfg, policy, want_cache, x, p, vision, cache):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, kv = attention_block(h, p["attn"], cfg, window=0, is_cross=True,
+                            kv_source=vision,
+                            cache=None if cache is None else cache.get("kv"))
+    x = policy.constrain(x + y)
+    return x, ({"kv": kv} if want_cache else {})
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ------------------------------------------------------------- forward
+def _embed(cfg, params, tokens):
+    if cfg.frontend == "audio":
+        parts = [jnp.take(params["embed"][k], tokens[..., k], axis=0)
+                 for k in range(cfg.codebooks)]
+        return functools.reduce(jnp.add, parts)
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        table = params["embed"]
+        if cfg.frontend == "audio":
+            return jnp.einsum("bsd,kvd->bskv", x, table)
+        return jnp.einsum("bsd,vd->bsv", x, table)
+    if cfg.frontend == "audio":
+        return jnp.einsum("bsd,kdv->bskv", x, params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def self_layer_windows(cfg):
+    """Window per *self* layer (cross layers removed from the pattern)."""
+    wins = [w for i, w in enumerate(cfg.window_pattern())
+            if not cfg.cross_attn_every
+            or (i + 1) % cfg.cross_attn_every != 0]
+    return jnp.asarray(wins, jnp.int32)
+
+
+def forward(params, cfg: ModelConfig, batch,
+            policy: ShardingPolicy = NO_POLICY, cache=None, cache_pos=None):
+    """batch: dict(tokens=[B,S] ([B,S,K] audio), vision=[B,T,D] optional).
+
+    cache=None: full forward (training).  Otherwise decode/prefill with the
+    pytree from ``make_cache``.  Returns (logits, new_cache).
+    """
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens) * jnp.asarray(
+        cfg.d_model ** 0.5, cfg.activation_dtype)
+    x = policy.constrain(x)
+    B, S = x.shape[0], x.shape[1]
+    if cache_pos is None:
+        cache_pos = jnp.int32(0)
+    kv_len = (cache_pos + S) if cache is not None else None
+    positions = cache_pos + jnp.arange(S, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (B, S))
+    windows = self_layer_windows(cfg)
+    want_cache = cache is not None
+
+    blk = functools.partial(self_block, cfg, policy, positions, cache_pos,
+                            kv_len)
+    blk = _maybe_remat(blk, cfg)
+
+    if not cfg.cross_attn_every:
+        def scan_fn(x, inp):
+            p, w, c = inp
+            return blk(x, p, w, c)
+
+        bc = cache["blocks"] if want_cache else None
+        if cfg.unroll_layers:
+            x, new_blocks = _unrolled_scan(scan_fn, x,
+                                           (params["blocks"], windows, bc))
+        else:
+            x, new_blocks = jax.lax.scan(scan_fn, x, (params["blocks"],
+                                                      windows, bc))
+        new_cache = {"blocks": new_blocks} if want_cache else None
+    else:
+        k = cfg.cross_attn_every
+        G = cfg.n_layers // k
+        vision = batch.get("vision")
+        wins = windows.reshape(G, k - 1)
+        selfp = jax.tree.map(lambda a: a.reshape(G, k - 1, *a.shape[1:]),
+                             params["blocks"])
+        cblk = _maybe_remat(
+            functools.partial(cross_block, cfg, policy, want_cache), cfg)
+
+        def group_fn(x, inp):
+            sp, cp, w, sc, cc = inp
+
+            def inner(x, i2):
+                p, wi, ci = i2
+                return blk(x, p, wi, ci)
+
+            if cfg.unroll_layers:
+                x, nsc = _unrolled_scan(inner, x, (sp, w, sc))
+            else:
+                x, nsc = jax.lax.scan(inner, x, (sp, w, sc))
+            x, ncc = cblk(x, cp, vision, cc)
+            return x, (nsc, ncc)
+
+        sc = cache["self"] if want_cache else None
+        cc = cache["cross"] if want_cache else None
+        if cfg.unroll_layers:
+            x, (nsc, ncc) = _unrolled_scan(
+                group_fn, x, (selfp, params["cross_blocks"], wins, sc, cc))
+        else:
+            x, (nsc, ncc) = jax.lax.scan(
+                group_fn, x, (selfp, params["cross_blocks"], wins, sc, cc))
+        new_cache = {"self": nsc, "cross": ncc} if want_cache else None
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, x)
+    return logits, new_cache
+
+
+def _unrolled_scan(fn, carry, xs):
+    """Python-unrolled lax.scan (same semantics for in-memory stacked xs).
+    Used by the dry-run so the compiled HLO contains every layer — XLA's
+    cost analysis counts a while body once, which would undercount
+    FLOPs/bytes by the layer count."""
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a, i=i: a[i], xs)
+        carry, y = fn(carry, x_i)
+        ys.append(y)
+    stacked = (jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+               if ys and jax.tree.leaves(ys[0]) else ys[0] if ys else None)
+    return carry, stacked
+
+
+# --------------------------------------------------------------- caches
+def make_cache(cfg: ModelConfig, batch_size: int, length: int, dtype=None):
+    """Zero-initialised KV+SSM cache pytree for prefill/decode."""
+    dt = dtype or cfg.activation_dtype
+    n_cross = n_cross_layers(cfg)
+    n_self = cfg.n_layers - n_cross
+
+    def layer_cache():
+        c = {}
+        if not cfg.attn_free:
+            hk, dh = cfg.n_kv_heads, cfg.d_head
+            if cfg.kv_cache_dtype == "int8":
+                c["kv"] = {
+                    "k": jnp.zeros((batch_size, length, hk, dh), jnp.int8),
+                    "v": jnp.zeros((batch_size, length, hk, dh), jnp.int8),
+                    "k_scale": jnp.zeros((batch_size, length, hk, 1),
+                                         jnp.float32),
+                    "v_scale": jnp.zeros((batch_size, length, hk, 1),
+                                         jnp.float32),
+                }
+            else:
+                c["kv"] = {
+                    "k": jnp.zeros((batch_size, length, hk, dh), dt),
+                    "v": jnp.zeros((batch_size, length, hk, dh), dt),
+                }
+        if cfg.ssm in ("mamba2", "hybrid"):
+            di, ns, nh, hd = ssm_dims(cfg)
+            c["ssm"] = {
+                "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1,
+                                   di + 2 * ns), dt),
+                "state": jnp.zeros((batch_size, nh, ns, hd), jnp.float32),
+            }
+        return c
+
+    if not cfg.cross_attn_every:
+        return {"blocks": jax.tree.map(
+            lambda x: jnp.zeros((n_self,) + x.shape, x.dtype),
+            layer_cache())}
+    k = cfg.cross_attn_every
+    G = cfg.n_layers // k
+    hk, dh = cfg.n_kv_heads, cfg.d_head
+    self_c = jax.tree.map(lambda x: jnp.zeros((G, k - 1) + x.shape, x.dtype),
+                          layer_cache())
+    cross_c = {"kv": {
+        "k": jnp.zeros((G, batch_size, cfg.cross_tokens, hk, dh), dt),
+        "v": jnp.zeros((G, batch_size, cfg.cross_tokens, hk, dh), dt),
+    }}
+    return {"self": self_c, "cross": cross_c}
+
+
+def prefill(params, cfg, batch, policy=NO_POLICY, cache_len=None):
+    """Run the prompt; returns (last-position logits, cache, next_pos)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape[0], tokens.shape[1]
+    cache = make_cache(cfg, B, cache_len or cfg.max_cache_len or S)
+    logits, cache = forward(params, cfg, batch, policy, cache=cache,
+                            cache_pos=jnp.int32(0))
+    return logits[:, -1:], cache, jnp.int32(S)
+
+
+def decode_step(params, cfg, tokens, cache, pos, policy=NO_POLICY):
+    """One decode step.  tokens [B,1] (audio: [B,1,K]); pos: scalar i32."""
+    logits, cache = forward(params, cfg, {"tokens": tokens}, policy,
+                            cache=cache, cache_pos=pos)
+    return logits, cache, pos + 1

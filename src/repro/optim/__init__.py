@@ -1,0 +1,3 @@
+from .adam import AdamW, AdamState, global_norm, clip_by_global_norm
+
+__all__ = ["AdamW", "AdamState", "global_norm", "clip_by_global_norm"]

@@ -1,0 +1,84 @@
+"""AdamW in plain JAX (bf16 params, f32 moments), with hooks used by the
+distributed trainer: gradient accumulation lives in the train step (scan
+over microbatches); optional bf16 gradient compression casts gradients
+before the (GSPMD-inserted) cross-replica reduction."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: object         # pytree like params (f32)
+    v: object
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    warmup_steps: int = 0
+    decay_steps: int = 0          # cosine decay horizon (0 = constant)
+
+    def init(self, params) -> AdamState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), m=zeros,
+                         v=jax.tree.map(jnp.copy, zeros))
+
+    def schedule(self, step):
+        lr = jnp.asarray(self.lr, jnp.float32)
+        if self.warmup_steps:
+            lr = lr * jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        if self.decay_steps:
+            t = jnp.clip((step - self.warmup_steps)
+                         / max(1, self.decay_steps - self.warmup_steps),
+                         0.0, 1.0)
+            lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** step.astype(jnp.float32))
+            vh = v / (1 - b2 ** step.astype(jnp.float32))
+            u = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamState(step=step, m=new_m, v=new_v)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm

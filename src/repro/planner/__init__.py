@@ -1,0 +1,5 @@
+from .extract import PipelinePlan, plan_graph, plan_assignment
+from .autotune import autotune, simulate_plan
+
+__all__ = ["PipelinePlan", "plan_graph", "plan_assignment", "autotune",
+           "simulate_plan"]

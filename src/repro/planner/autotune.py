@@ -1,0 +1,49 @@
+"""Scheduler-in-the-loop plan autotuning.
+
+Candidate pipeline plans (stage count x microbatches x schedule rule) are
+ranked by their simulated makespan under the paper's *max-min fairness*
+network model — the paper's F1 finding (the `simple` model mis-estimates
+by up to an order of magnitude) is exactly why the realistic model sits in
+this loop.  Returns the best plan + the full ranking.
+"""
+from __future__ import annotations
+
+from repro.core.simulator import Simulator
+from repro.core.worker import Worker
+from repro.core.schedulers.fixed import FixedScheduler
+from repro.launch.roofline import LINK_BW
+from .extract import PipelinePlan, plan_graph, plan_assignment
+
+
+def simulate_plan(cfg, shape, plan: PipelinePlan, netmodel="maxmin",
+                  bandwidth=LINK_BW):
+    g = plan_graph(cfg, shape, plan)
+    assign, prio = plan_assignment(g, plan)
+    workers = [Worker(k, 1) for k in range(plan.n_stages)]
+    sched = FixedScheduler(assign, prio)
+    rep = Simulator(g, workers, sched, netmodel=netmodel,
+                    bandwidth=bandwidth, imode="exact",
+                    msd=0.0, decision_delay=0.0).run()
+    return rep
+
+
+def autotune(cfg, shape, stage_candidates=(2, 4, 8),
+             micro_candidates=(4, 8, 16, 32),
+             rules=("depth", "micro"), netmodel="maxmin",
+             total_chips=64):
+    """Grid-search plans; returns (best_plan, ranking list)."""
+    results = []
+    for K in stage_candidates:
+        if cfg.n_layers % K:
+            continue
+        for M in micro_candidates:
+            if shape.global_batch % M or M < K:
+                continue
+            for rule in rules:
+                plan = PipelinePlan(n_stages=K, n_micro=M,
+                                    priority_rule=rule,
+                                    chips_per_stage=total_chips // K)
+                rep = simulate_plan(cfg, shape, plan, netmodel=netmodel)
+                results.append((rep.makespan, plan, rep))
+    results.sort(key=lambda r: r[0])
+    return results[0][1], results

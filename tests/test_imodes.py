@@ -1,0 +1,47 @@
+"""Information modes expose the right knowledge (paper §2)."""
+import pytest
+
+from repro.core import TaskGraph, MiB, make_imode
+
+
+class FakeRuntime:
+    def __init__(self):
+        self.done = set()
+
+    def is_finished(self, t):
+        return t in self.done
+
+    def is_produced(self, o):
+        return o.parent in self.done
+
+
+def setup():
+    g = TaskGraph("t")
+    a = g.new_task(10.0, outputs=[100 * MiB], expected_duration=12.0,
+                   name="a")
+    a.outputs[0].expected_size = 80 * MiB
+    b = g.new_task(30.0, inputs=a.outputs, name="b",
+                   expected_duration=25.0)
+    return g, a, b
+
+
+@pytest.mark.parametrize("mode,da,sa", [
+    ("exact", 10.0, 100), ("user", 12.0, 80), ("mean", 20.0, 100)])
+def test_unfinished_estimates(mode, da, sa):
+    g, a, b = setup()
+    im = make_imode(mode, g)
+    im.attach_runtime(FakeRuntime())
+    assert im.duration(a) == pytest.approx(da)
+    assert im.size(a.outputs[0]) == pytest.approx(sa * MiB)
+
+
+@pytest.mark.parametrize("mode", ["exact", "user", "mean"])
+def test_finished_elements_report_truth(mode):
+    g, a, b = setup()
+    im = make_imode(mode, g)
+    rt = FakeRuntime()
+    im.attach_runtime(rt)
+    rt.done.add(a)
+    assert im.duration(a) == 10.0
+    assert im.size(a.outputs[0]) == 100 * MiB
+    assert im.duration(b) != 30.0 or mode == "exact"

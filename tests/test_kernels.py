@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (deliverable c)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention, ssd, waterfill, ref
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Skv,D", [
+    (1, 4, 4, 128, 128, 64),
+    (2, 8, 2, 256, 256, 64),     # GQA 4:1
+    (1, 4, 1, 128, 256, 64),     # MQA, query suffix of longer history
+    (2, 2, 2, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+def test_flash_attention_allclose(B, Hq, Hkv, Sq, Skv, D, dtype, causal,
+                                  window):
+    q, k, v = (rand((B, Hq, Sq, D), dtype), rand((B, Hkv, Skv, D), dtype),
+               rand((B, Hkv, Skv, D), dtype))
+    got = attention(q, k, v, causal=causal, window=window,
+                    use_pallas=True, blk_q=64, blk_k=64)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("Bt,L,H,P,N", [
+    (1, 128, 2, 32, 16), (2, 128, 3, 64, 32), (1, 64, 4, 32, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_allclose(Bt, L, H, P, N, dtype):
+    x = rand((Bt, L, H, P), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (Bt, L, H)), dtype)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B = rand((Bt, L, N), dtype)
+    C = rand((Bt, L, N), dtype)
+    D = jnp.asarray(RNG.standard_normal((H,)), jnp.float32)
+    got = ssd(x, dt, A, B, C, D, use_pallas=True, blk_l=32)
+    want = ref.ssd_ref(x, dt, A, B, C, D)
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol * 10, rtol=tol)
+
+
+def test_ssd_chunked_equals_ref():
+    x = rand((2, 128, 3, 32), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (2, 128, 3)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (3,)), jnp.float32)
+    B = rand((2, 128, 16), jnp.float32)
+    C = rand((2, 128, 16), jnp.float32)
+    got = ref.ssd_chunked(x, dt, A, B, C, None, chunk=32)
+    want = ref.ssd_ref(x, dt, A, B, C, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("Bt,F,W", [(2, 8, 4), (4, 32, 8), (1, 64, 16)])
+def test_waterfill_allclose(Bt, F, W):
+    src = jnp.asarray(RNG.integers(0, W, (Bt, F)), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, W, (Bt, F)), jnp.int32)
+    active = jnp.asarray(RNG.random((Bt, F)) < 0.6)
+    caps = jnp.asarray(RNG.uniform(50, 150, (Bt, W)), jnp.float32)
+    got = waterfill(src, dst, active, caps, caps, use_pallas=True)
+    want = ref.waterfill_ref(src, dst, active, caps, caps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_waterfill_matches_python_reference():
+    from repro.core.netmodels import Flow, maxmin_fairness
+    pairs = [(0, 1), (0, 2), (3, 1), (2, 0)]
+    flows = [Flow(src=s, dst=d, obj=None, remaining=1.0) for s, d in pairs]
+    caps = {i: 100.0 for i in range(4)}
+    want = maxmin_fairness(flows, caps, dict(caps))
+    src = jnp.asarray([[s for s, _ in pairs]], jnp.int32)
+    dst = jnp.asarray([[d for _, d in pairs]], jnp.int32)
+    active = jnp.ones((1, 4), bool)
+    capsj = jnp.full((1, 4), 100.0, jnp.float32)
+    got = waterfill(src, dst, active, capsj, capsj, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got)[0], want, rtol=1e-5)

@@ -1,0 +1,81 @@
+"""Max-min fairness + simple network models (paper §2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.netmodels import Flow, maxmin_fairness, make_netmodel
+
+
+def mk_flows(pairs):
+    return [Flow(src=s, dst=d, obj=None, remaining=1e9) for s, d in pairs]
+
+
+def test_single_flow_gets_full_bandwidth():
+    flows = mk_flows([(0, 1)])
+    rates = maxmin_fairness(flows, {0: 100.0, 1: 100.0}, {0: 100.0, 1: 100.0})
+    assert rates == [100.0]
+
+
+def test_shared_uplink_split():
+    flows = mk_flows([(0, 1), (0, 2)])
+    caps = {i: 100.0 for i in range(3)}
+    rates = maxmin_fairness(flows, caps, dict(caps))
+    assert rates == [50.0, 50.0]
+
+
+def test_bottleneck_redistribution():
+    # two flows into worker 1 (shared downlink), one into worker 2
+    flows = mk_flows([(0, 1), (2, 1), (3, 2)])
+    caps = {i: 100.0 for i in range(4)}
+    rates = maxmin_fairness(flows, caps, dict(caps))
+    assert rates[0] == rates[1] == pytest.approx(50.0)
+    assert rates[2] == pytest.approx(100.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5)),
+                min_size=1, max_size=20).filter(
+                    lambda ps: all(s != d for s, d in ps)))
+def test_maxmin_feasible_and_maxmin(pairs):
+    """Property: allocation is feasible and no flow can be increased
+    without decreasing an equal-or-smaller one (max-min optimality)."""
+    flows = mk_flows(pairs)
+    caps = {i: 100.0 for i in range(6)}
+    rates = maxmin_fairness(flows, caps, dict(caps))
+    # feasibility
+    up = {i: 0.0 for i in range(6)}
+    down = {i: 0.0 for i in range(6)}
+    for f, r in zip(flows, rates):
+        assert r > 0
+        up[f.src] += r
+        down[f.dst] += r
+    for i in range(6):
+        assert up[i] <= 100.0 + 1e-6
+        assert down[i] <= 100.0 + 1e-6
+    # max-min: every flow is blocked by a saturated resource on which it
+    # has a maximal rate
+    for f, r in zip(flows, rates):
+        blocked = False
+        for res, load in (("u", up[f.src]), ("d", down[f.dst])):
+            if load >= 100.0 - 1e-6:
+                peers = [r2 for f2, r2 in zip(flows, rates)
+                         if (f2.src == f.src if res == "u"
+                             else f2.dst == f.dst)]
+                if r >= max(peers) - 1e-6:
+                    blocked = True
+        assert blocked, (pairs, rates)
+
+
+def test_simple_model_ignores_contention():
+    nm = make_netmodel("simple", 100.0)
+    for i in range(5):
+        nm.add_flow(Flow(src=0, dst=1, obj=None, remaining=1000.0))
+    nm.recompute([0, 1])
+    assert all(f.rate == 100.0 for f in nm.flows)
+
+
+def test_maxmin_model_shares():
+    nm = make_netmodel("maxmin", 100.0)
+    for i in range(4):
+        nm.add_flow(Flow(src=0, dst=1, obj=None, remaining=1000.0))
+    nm.recompute([0, 1])
+    assert all(f.rate == pytest.approx(25.0) for f in nm.flows)

@@ -1,0 +1,44 @@
+"""Scheduler-in-the-loop planner (the paper's technique on LM plans)."""
+import pytest
+
+from repro.configs import get_config, SHAPES
+from repro.planner import PipelinePlan, plan_graph, plan_assignment, \
+    autotune, simulate_plan
+
+
+def test_plan_graph_structure():
+    cfg = get_config("qwen3-32b")
+    plan = PipelinePlan(n_stages=4, n_micro=8)
+    g = plan_graph(cfg, SHAPES["train_4k"], plan)
+    g.validate()
+    # M*(K fwd + K bwd) + K optimizer tasks
+    assert g.task_count == 8 * (4 + 4) + 4
+    assert g.longest_path() >= 2 * 4      # fwd chain + bwd chain
+
+
+def test_plan_assignment_pins_stages():
+    cfg = get_config("qwen3-32b")
+    plan = PipelinePlan(n_stages=4, n_micro=8)
+    g = plan_graph(cfg, SHAPES["train_4k"], plan)
+    assign, prio = plan_assignment(g, plan)
+    for t in g.tasks:
+        assert assign[t] == int(t.name[3:])
+
+
+def test_autotune_ranks_plans():
+    cfg = get_config("qwen3-32b")
+    best, ranking = autotune(cfg, SHAPES["train_4k"],
+                             stage_candidates=(2, 4),
+                             micro_candidates=(8, 16))
+    assert len(ranking) >= 4
+    assert ranking[0][0] <= ranking[-1][0]
+    assert best.name == ranking[0][1].name
+
+
+def test_more_microbatches_shrink_bubble():
+    """Classic pipelining: more microbatches => smaller bubble fraction."""
+    cfg = get_config("qwen3-32b")
+    shape = SHAPES["train_4k"]
+    m4 = simulate_plan(cfg, shape, PipelinePlan(4, 4)).makespan
+    m32 = simulate_plan(cfg, shape, PipelinePlan(4, 32)).makespan
+    assert m32 < m4

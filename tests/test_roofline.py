@@ -1,0 +1,49 @@
+"""HLO collective parsing + roofline term arithmetic."""
+import pytest
+
+from repro.launch.roofline import (parse_collectives, shape_bytes,
+                                   terms_from_totals, PEAK_FLOPS, HBM_BW,
+                                   LINK_BW)
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %p1 = f32[16,16]{1,0} parameter(1)
+  %ag = bf16[64,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[16,16]{1,0} all-reduce(%p1), to_apply=add
+  %rs = f32[2,16]{1,0} reduce-scatter(%p1), dimensions={0}, to_apply=add
+  %cp = bf16[8,128]{1,0} collective-permute(%p0),
+    source_target_pairs={{0,1}}
+  ROOT %t = (bf16[64,128]{1,0}) tuple(%ag)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert shape_bytes("f32[16,16]") == 16 * 16 * 4
+    assert shape_bytes("(bf16[2,2], f32[2])") == 8 + 8
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_counts_and_bytes():
+    out = parse_collectives(HLO)
+    b = out["bytes_by_op"]
+    assert b["all-gather"] == 8 * 128 * 2          # operand, not output
+    assert b["all-reduce"] == 16 * 16 * 4
+    assert b["reduce-scatter"] == 16 * 16 * 4
+    assert b["collective-permute"] == 8 * 128 * 2
+    assert out["counts_by_op"]["all-gather"] == 1
+    assert out["total_count"] == 4
+
+
+def test_terms_and_dominance():
+    r = terms_from_totals(flops=PEAK_FLOPS, hbm_bytes=HBM_BW / 2,
+                          coll_bytes=LINK_BW / 4, n_chips=4,
+                          model_flops=2 * PEAK_FLOPS)
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["memory_s"] == pytest.approx(0.5)
+    assert r["collective_s"] == pytest.approx(0.25)
+    assert r["dominant"] == "compute_s"
+    assert r["useful_flops_ratio"] == pytest.approx(0.5)

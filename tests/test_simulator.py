@@ -1,0 +1,147 @@
+"""Reference simulator invariants + scheduler behaviour (paper §4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TaskGraph, MiB, make_scheduler, Simulator, Worker,
+                        run_single_simulation)
+from repro.core.graphs import make_graph, random_graph
+from repro.core.schedulers import SCHEDULERS
+from repro.core.schedulers.fixed import FixedScheduler
+
+ALL_SCHEDULERS = list(SCHEDULERS)
+
+
+def simulate(graph, sched_name, workers=4, cores=4, **kw):
+    sched = make_scheduler(sched_name, seed=1)
+    return run_single_simulation(graph, workers, cores, sched, **kw)
+
+
+@pytest.mark.parametrize("sched", ALL_SCHEDULERS)
+def test_all_schedulers_complete(sched):
+    g = make_graph("crossv", seed=0)
+    rep = simulate(g, sched, msd=0.1, decision_delay=0.05)
+    assert rep.makespan > 0
+    assert len(rep.task_records) == g.task_count
+    assert all(r.finish is not None for r in rep.task_records.values())
+
+
+@pytest.mark.parametrize("sched", ["blevel", "blevel-gt", "ws", "random"])
+def test_makespan_lower_bounds(sched):
+    """makespan >= critical path; makespan >= total work / total cores."""
+    g = make_graph("crossv", seed=0)
+    rep = simulate(g, sched, workers=8, cores=4)
+    assert rep.makespan >= g.critical_path_time() - 1e-6
+    work = sum(t.duration * t.cpus for t in g.tasks)
+    assert rep.makespan >= work / (8 * 4) - 1e-6
+
+
+def test_single_scheduler_never_transfers():
+    g = make_graph("crossv", seed=0)
+    rep = simulate(g, "single")
+    assert rep.transferred_bytes == 0
+
+
+def test_single_worker_serialises():
+    g = TaskGraph("chain")
+    prev = g.new_task(1.0, outputs=[MiB])
+    for _ in range(4):
+        prev = g.new_task(1.0, inputs=prev.outputs, outputs=[MiB])
+    rep = run_single_simulation(g, 1, 1, make_scheduler("blevel"))
+    assert rep.makespan == pytest.approx(5.0)
+
+
+def test_core_constraint_respected():
+    """Two 4-core tasks on a 4-core worker cannot overlap."""
+    g = TaskGraph("pair")
+    g.new_task(1.0, cpus=4)
+    g.new_task(1.0, cpus=4)
+    rep = run_single_simulation(g, 1, 4, make_scheduler("blevel"))
+    assert rep.makespan == pytest.approx(2.0)
+    rep = run_single_simulation(g, 1, 8, make_scheduler("blevel"))
+    assert rep.makespan == pytest.approx(1.0)
+
+
+def test_transfer_time_simple_model():
+    """100 MiB at 100 MiB/s = 1 s between producer and consumer."""
+    g = TaskGraph("move")
+    a = g.new_task(1.0, outputs=[100 * MiB])
+    g.new_task(1.0, inputs=a.outputs)
+    assign = {t: i for i, t in enumerate(g.tasks)}
+    rep = Simulator(g, [Worker(0, 1), Worker(1, 1)],
+                    FixedScheduler(assign), netmodel="simple",
+                    bandwidth=100 * MiB).run()
+    assert rep.makespan == pytest.approx(3.0, rel=1e-6)
+    assert rep.transferred_bytes == pytest.approx(100 * MiB)
+
+
+def test_maxmin_contention_slows_transfers():
+    """Two simultaneous downloads from one producer share its uplink."""
+    g = TaskGraph("fan")
+    a = g.new_task(1.0, outputs=[100 * MiB, 100 * MiB])
+    g.new_task(0.1, inputs=[a.outputs[0]])
+    g.new_task(0.1, inputs=[a.outputs[1]])
+    assign = {g.tasks[0]: 0, g.tasks[1]: 1, g.tasks[2]: 2}
+    mk = {}
+    for nm in ("simple", "maxmin"):
+        rep = Simulator(g, [Worker(i, 1) for i in range(3)],
+                        FixedScheduler(dict(assign)), netmodel=nm,
+                        bandwidth=100 * MiB).run()
+        mk[nm] = rep.makespan
+    assert mk["simple"] == pytest.approx(2.1, rel=1e-6)
+    assert mk["maxmin"] == pytest.approx(3.1, rel=1e-6)  # shared uplink
+
+
+def test_msd_rate_limits_scheduler():
+    g = make_graph("fork1", seed=0)
+    reps = {}
+    for msd in (0.0, 6.4):
+        sched = make_scheduler("ws", seed=1)
+        reps[msd] = run_single_simulation(
+            g, 8, 4, sched, msd=msd,
+            decision_delay=0.05 if msd else 0.0)
+    assert reps[6.4].scheduler_invocations < reps[0.0].scheduler_invocations
+
+
+def test_decision_delay_shifts_start():
+    g = TaskGraph("one")
+    g.new_task(1.0)
+    sched = make_scheduler("blevel", seed=0)
+    rep = run_single_simulation(g, 1, 1, sched, msd=0.1,
+                                decision_delay=0.05)
+    assert rep.makespan == pytest.approx(1.05)
+
+
+def test_reschedule_fails_for_running_task():
+    """ws may reschedule; running tasks must not move (paper §2)."""
+    g = make_graph("fastcrossv", seed=0)
+    rep = simulate(g, "ws", workers=4, cores=4, msd=0.1,
+                   decision_delay=0.05)
+    # every task ran exactly once and finished
+    assert len(rep.task_records) == g.task_count
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["blevel-gt", "ws", "etf"]))
+def test_property_random_graphs_complete(seed, sched):
+    g = random_graph(seed, n_tasks=18)
+    rep = simulate(g, sched, workers=3, cores=4, msd=0.1,
+                   decision_delay=0.05)
+    assert rep.makespan >= g.critical_path_time() - 1e-6
+    work = sum(t.duration * t.cpus for t in g.tasks)
+    assert rep.makespan >= work / 12 - 1e-6
+
+
+def test_imodes_change_information_not_reality():
+    """Task durations in the simulation are ground truth regardless of
+    imode; only scheduler decisions may differ."""
+    g = make_graph("duration_stairs", seed=0)
+    mk = {}
+    for imode in ("exact", "user", "mean"):
+        sched = make_scheduler("blevel-gt", seed=1)
+        mk[imode] = run_single_simulation(g, 32, 4, sched,
+                                          imode=imode).makespan
+    work = sum(t.duration for t in g.tasks)
+    for v in mk.values():
+        assert v >= work / (32 * 4) - 1e-6
+    # mean imode must degrade (or match) this graph per paper Fig. 9
+    assert mk["mean"] >= mk["exact"] * 0.95

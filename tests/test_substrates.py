@@ -1,0 +1,111 @@
+"""Data pipeline / checkpoint / optimizer substrates."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig, TokenPipeline
+from repro.checkpoint import CheckpointManager
+from repro.optim import AdamW, clip_by_global_norm
+
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8, seed=3)
+    p1 = TokenPipeline(cfg)
+    p2 = TokenPipeline(cfg)
+    b1 = p1.batch(7)
+    b2 = p2.batch(7)                       # fresh pipeline, same step
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 16)
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 100
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8, seed=0)
+    full = TokenPipeline(cfg).batch(5)["tokens"]
+    parts = [TokenPipeline(cfg, host_id=h, num_hosts=2).batch(5)["tokens"]
+             for h in range(2)]
+    assert parts[0].shape == (4, 8)
+    # different hosts produce different slices
+    assert not np.array_equal(parts[0], parts[1])
+
+
+def test_pipeline_audio_codebooks():
+    cfg = DataConfig(vocab_size=64, seq_len=8, global_batch=2, codebooks=4)
+    b = TokenPipeline(cfg).batch(0)
+    assert b["tokens"].shape == (2, 8, 4)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "s": jnp.int32(7)}
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(10, tree, extra={"loss": 1.5})
+    restored = mgr.restore(tree)
+    assert restored["step"] == 10
+    assert restored["extra"]["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(tree),
+                    jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_keep_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+    assert mgr.latest_step == 4
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.zeros(3)})
+    assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))
+
+
+def test_adamw_reduces_loss_quadratic():
+    opt = AdamW(lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(120):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(300.0))
+    total = float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                               for x in jax.tree.leaves(clipped))))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_trainer_checkpoint_restart(tmp_path):
+    """Fault-tolerance integration: kill at step 6, restart, converge to
+    the same final state as an uninterrupted run (step-keyed data)."""
+    from repro.launch.train import main
+    ckpt = str(tmp_path / "ck")
+    args = ["--arch", "mamba2-130m", "--smoke", "--batch", "2",
+            "--seq", "16", "--ckpt-dir", ckpt, "--ckpt-every", "3"]
+    l1 = main(args + ["--steps", "6"])      # "preempted" at step 6
+    l2 = main(args + ["--steps", "9"])      # restart, runs 6..9
+    l3 = main(["--arch", "mamba2-130m", "--smoke", "--batch", "2",
+               "--seq", "16", "--steps", "9",
+               "--ckpt-dir", str(tmp_path / "ck2"), "--ckpt-every", "100"])
+    assert len(l2) == 3                     # resumed from step 6
+    assert l2[-1] == pytest.approx(l3[-1], rel=1e-4)

@@ -1,0 +1,60 @@
+"""Vectorized JAX simulator == reference simulator (DESIGN.md §3,
+the paper-§6.1 validation analogue)."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import MiB
+from repro.core.simulator import Simulator
+from repro.core.worker import Worker
+from repro.core.schedulers.fixed import FixedScheduler
+from repro.core.graphs import make_graph, random_graph
+from repro.core.vectorized import encode_graph, make_simulator
+
+
+def both(g, W, cores, netmodel, seed, bw=100 * MiB):
+    import jax
+    rng = random.Random(seed)
+    assign = {t: rng.randrange(W) for t in g.tasks}
+    prios = {t: float(len(g.tasks) - i) for i, t in enumerate(g.tasks)}
+    rep = Simulator(g, [Worker(i, cores) for i in range(W)],
+                    FixedScheduler(dict(assign), prios), netmodel=netmodel,
+                    bandwidth=bw, msd=0.0).run()
+    run = jax.jit(make_simulator(encode_graph(g), W, cores, netmodel))
+    a = np.array([assign[t] for t in g.tasks], np.int32)
+    p = np.array([prios[t] for t in g.tasks], np.float32)
+    ms, xfer = run(a, p, bandwidth=bw)
+    return rep, float(ms), float(xfer)
+
+
+@pytest.mark.parametrize("gname", ["crossv", "fork1", "splitters"])
+@pytest.mark.parametrize("netmodel", ["simple", "maxmin"])
+def test_matches_reference(gname, netmodel):
+    g = make_graph(gname, seed=0)
+    rep, ms, xfer = both(g, 8, 4, netmodel, seed=1)
+    assert ms == pytest.approx(rep.makespan, rel=2e-3)
+    assert xfer == pytest.approx(rep.transferred_bytes, rel=1e-3)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_matches_reference_random(seed):
+    g = random_graph(seed, n_tasks=20)
+    rep, ms, _ = both(g, 4, 4, "maxmin", seed=seed + 50)
+    assert ms == pytest.approx(rep.makespan, rel=2e-3)
+
+
+def test_vmap_batches_schedules():
+    import jax
+    g = make_graph("fork1", seed=0)
+    spec = encode_graph(g)
+    run = make_simulator(spec, 4, 4, "maxmin")
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, 4, (8, spec.T)).astype(np.int32)
+    P = np.tile(np.arange(spec.T, 0, -1, dtype=np.float32), (8, 1))
+    ms, xfer = jax.jit(jax.vmap(lambda a, p: run(a, p)))(A, P)
+    assert ms.shape == (8,)
+    assert np.all(np.isfinite(np.asarray(ms)))
+    # batched results match one-at-a-time
+    m0, _ = jax.jit(run)(A[3], P[3])
+    assert float(ms[3]) == pytest.approx(float(m0), rel=1e-6)
