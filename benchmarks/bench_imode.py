@@ -1,25 +1,47 @@
 """Paper Fig. 8 / Fig. 9 (finding F5): information modes matter less than
-the netmodel; `mean` costs blevel-gt/ws up to ~25% on duration_stairs."""
+the netmodel; `mean` degrades blevel-style scheduling on duration_stairs.
+
+The whole (graph x scheduler x imode) grid runs through the batched
+vectorized simulator — imodes are just dense estimate arrays under
+``jax.vmap`` (``imodes.encode_imode``) — with the reference simulator
+timed on the same points as the speedup/agreement baseline."""
 from __future__ import annotations
 
 import collections
 
-from .common import sweep, emit
+from .common import MiB, sweep_vectorized, time_reference_twin, write_csv
+
+IMODES = ("exact", "user", "mean")
 
 
 def run(fast=True):
     graphs = ["crossv", "duration_stairs"] if fast else \
         ["crossv", "crossvx", "nestedcrossv", "duration_stairs",
          "size_stairs", "plain1e"]
-    scheds = ["blevel-gt", "ws"] if fast else ["blevel", "blevel-gt",
-                                               "mcp-gt", "dls", "ws"]
-    spec = [dict(graph_name=g, scheduler_name=s, workers=32, cores=4,
-                 bandwidth_mib=128, imode=im)
-            for g in graphs for s in scheds
-            for im in ("exact", "user", "mean")]
-    rows = sweep(spec, reps=2 if fast else 5)
-    emit("imode", rows,
-         lambda r: f"{r['graph']}/{r['scheduler']}/{r['imode']}")
+    scheds = ["blevel", "greedy"]
+    workers, cores, bw = 32, 4, 128 * MiB
+
+    rows = []
+    speed = []
+    for g in graphs:
+        for s in scheds:
+            points = [dict(msd=0.1, decision_delay=0.05, imode=im,
+                           bandwidth=bw) for im in IMODES]
+            vrows, vec_us = sweep_vectorized(g, s, workers, cores, points)
+            rows.extend(vrows)
+            ref_pts = points[:1] if fast else points
+            reps, ref_us = time_reference_twin(g, s, workers, cores,
+                                               ref_pts)
+            speed.append((g, s, vec_us, ref_us))
+            for p, rep in zip(ref_pts, reps):
+                vec = next(r for r in vrows if r["imode"] == p["imode"])
+                print(f"imode/agree_{g}/{s}/{p['imode']},{ref_us:.0f},"
+                      f"{vec['makespan'] / rep.makespan:.4f}")
+
+    write_csv("imode", rows)
+    for r in rows:
+        print(f"imode/{r['graph']}/{r['scheduler']}/{r['imode']},"
+              f"{r['wall_us']:.0f},{r['makespan']:.2f}")
     acc = collections.defaultdict(list)
     for r in rows:
         acc[(r["graph"], r["scheduler"], r["imode"])].append(r["makespan"])
@@ -28,4 +50,6 @@ def run(fast=True):
         if base and im != "exact":
             print(f"imode/norm_{g}/{s}/{im},0,"
                   f"{(sum(ms)/len(ms))/(sum(base)/len(base)):.3f}")
+    for g, s, vec_us, ref_us in speed:
+        print(f"imode/speedup_{g}/{s},{vec_us:.0f},{ref_us / vec_us:.1f}")
     return rows

@@ -1,23 +1,46 @@
 """Paper Fig. 7 (finding F4): minimal scheduling delay has limited effect;
-increasing it can even help (event batching)."""
+increasing it can even help (event batching).
+
+The whole (graph x scheduler x msd) grid runs through the batched
+vectorized simulator — one jit+vmap call per (graph, scheduler) — with
+the reference simulator timed on the same points as the speedup/agreement
+baseline (DESIGN.md §3)."""
 from __future__ import annotations
 
 import collections
 
-from .common import sweep, emit
+from .common import MiB, sweep_vectorized, time_reference_twin, write_csv
 
 
 def run(fast=True):
     graphs = ["fastcrossv"] if fast else ["crossv", "fastcrossv",
                                           "crossvx", "nestedcrossv"]
-    scheds = ["ws", "blevel-gt"] if fast else ["ws", "blevel-gt", "mcp-gt",
-                                               "random"]
+    scheds = ["greedy", "blevel"]
     msds = [0.0, 0.1, 1.6] if fast else [0.0, 0.1, 0.4, 1.6, 6.4]
-    spec = [dict(graph_name=g, scheduler_name=s, workers=32, cores=4,
-                 bandwidth_mib=128, msd=m)
-            for g in graphs for s in scheds for m in msds]
-    rows = sweep(spec, reps=2 if fast else 5)
-    emit("msd", rows, lambda r: f"{r['graph']}/{r['scheduler']}/msd{r['msd']}")
+    workers, cores, bw = 32, 4, 128 * MiB
+
+    rows = []
+    speed = []
+    for g in graphs:
+        for s in scheds:
+            points = [dict(msd=m, decision_delay=0.05 if m > 0 else 0.0,
+                           imode="exact", bandwidth=bw) for m in msds]
+            vrows, vec_us = sweep_vectorized(g, s, workers, cores, points)
+            rows.extend(vrows)
+            # reference baseline on a subset (it is the slow path)
+            ref_pts = points[1:2] if fast else points
+            reps, ref_us = time_reference_twin(g, s, workers, cores,
+                                               ref_pts)
+            speed.append((g, s, vec_us, ref_us))
+            for p, rep in zip(ref_pts, reps):
+                vec = next(r for r in vrows if r["msd"] == p["msd"])
+                print(f"msd/agree_{g}/{s}/msd{p['msd']},{ref_us:.0f},"
+                      f"{vec['makespan'] / rep.makespan:.4f}")
+
+    write_csv("msd", rows)
+    for r in rows:
+        print(f"msd/{r['graph']}/{r['scheduler']}/msd{r['msd']},"
+              f"{r['wall_us']:.0f},{r['makespan']:.2f}")
     acc = collections.defaultdict(list)
     for r in rows:
         acc[(r["graph"], r["scheduler"], r["msd"])].append(r["makespan"])
@@ -26,4 +49,6 @@ def run(fast=True):
         if base and m > 0:
             print(f"msd/norm_{g}/{s}/msd{m},0,"
                   f"{(sum(ms)/len(ms))/(sum(base)/len(base)):.3f}")
+    for g, s, vec_us, ref_us in speed:
+        print(f"msd/speedup_{g}/{s},{vec_us:.0f},{ref_us / vec_us:.1f}")
     return rows

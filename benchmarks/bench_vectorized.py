@@ -41,7 +41,8 @@ def run(fast=True):
                     bandwidth=100 * MiB, msd=0.0).run()
                 a = np.array([assign[t] for t in g.tasks], np.int32)
                 p = np.array([prios[t] for t in g.tasks], np.float32)
-                ms, _ = run_fn(a, p, bandwidth=100.0 * MiB)
+                ms, _, ok = run_fn(a, p, bandwidth=100.0 * MiB)
+                assert bool(ok), (gname, netmodel, seed)
                 rel = abs(float(ms) - rep.makespan) / rep.makespan
                 errs.append(max(rel, 1e-9))
                 rows.append({"graph": gname, "netmodel": netmodel,

@@ -1,6 +1,8 @@
 """Shared benchmark harness: sweeps (graph x scheduler x cluster x
-bandwidth x netmodel x imode x msd) through the reference simulator and
-emits ``name,us_per_call,derived`` CSV rows + per-bench CSV files."""
+bandwidth x netmodel x imode x msd) through the reference simulator or —
+for the dynamic-scheduling axes (msd/imode, DESIGN.md §3) — through the
+batched vectorized simulator, one ``jax.vmap`` per (graph, scheduler).
+Emits ``name,us_per_call,derived`` CSV rows + per-bench CSV files."""
 from __future__ import annotations
 
 import csv
@@ -41,6 +43,66 @@ def sweep(rows_spec, reps=3):
         for seed in range(reps):
             rows.append(run_one(seed=seed, **spec))
     return rows
+
+
+# the vectorized schedulers' deterministic reference twins, for
+# speedup/agreement baselines (see repro.core.schedulers.det)
+REF_TWIN = {"blevel": "blevel-det", "greedy": "greedy"}
+
+
+def sweep_vectorized(graph_name, scheduler, workers, cores, points,
+                     netmodel="maxmin", graph_seed=0):
+    """Run a whole (msd x decision_delay x imode x bandwidth) grid for one
+    (graph, scheduler) through the batched vectorized simulator.
+
+    Returns ``(rows, us_per_sim)``: one row per grid point, with the
+    amortised wall time of a warm batched call.  The first call pays the
+    jit compile; the reported time is the second (steady-state) call, the
+    regime the ROADMAP's batched sweeps run in.
+    """
+    from repro.core.vectorized import DynamicGridRunner
+
+    g = make_graph(graph_name, seed=graph_seed)
+    runner = DynamicGridRunner(g, scheduler, workers, cores,
+                               netmodel=netmodel)
+    ms, xfer = runner(points)                             # compile + run
+    t0 = time.perf_counter()
+    ms, xfer = runner(points)
+    wall = time.perf_counter() - t0
+    us_per_sim = wall / len(points) * 1e6
+    rows = []
+    for p, m, x in zip(points, ms, xfer):
+        rows.append({
+            "graph": graph_name, "scheduler": scheduler,
+            "workers": workers, "cores": cores,
+            "bandwidth_mib": p.get("bandwidth", 100 * MiB) / MiB,
+            "netmodel": netmodel, "imode": p.get("imode", "exact"),
+            "msd": p.get("msd", 0.0),
+            "decision_delay": p.get("decision_delay", 0.0),
+            "seed": 0, "makespan": float(m),
+            "transferred_mib": float(x) / MiB,
+            "wall_us": us_per_sim,
+        })
+    return rows, us_per_sim
+
+
+def time_reference_twin(graph_name, scheduler, workers, cores, points,
+                        netmodel="maxmin", graph_seed=0):
+    """Per-simulation wall time of the reference simulator running the
+    deterministic twin of a vectorized scheduler over ``points``."""
+    g = make_graph(graph_name, seed=graph_seed)
+    t0 = time.perf_counter()
+    reps = []
+    for p in points:
+        sched = make_scheduler(REF_TWIN[scheduler], seed=0)
+        ws = [Worker(i, cores) for i in range(workers)]
+        reps.append(Simulator(
+            g, ws, sched, netmodel=netmodel,
+            bandwidth=p.get("bandwidth", 100 * MiB),
+            imode=p.get("imode", "exact"), msd=p.get("msd", 0.0),
+            decision_delay=p.get("decision_delay", 0.0)).run())
+    wall = time.perf_counter() - t0
+    return reps, wall / len(points) * 1e6
 
 
 def write_csv(name, rows):

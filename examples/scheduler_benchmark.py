@@ -4,16 +4,23 @@
 * F1 (Fig 6): the `simple` netmodel under-estimates makespans vs max-min,
   most at low bandwidth;
 * F6 (Fig 3): `random` is surprisingly competitive at high bandwidth;
-* F4 (Fig 7): MSD has a limited effect.
+* F4 (Fig 7) / F5 (Fig 8-9): MSD and information modes have a limited
+  effect — swept as ONE batched (msd x imode) grid through the
+  vectorized simulator (one jit+vmap call per scheduler, DESIGN.md §3).
 
 Full sweeps: ``python -m benchmarks.run --full``.
 """
 import os
 import sys
+import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import MiB, make_scheduler, run_single_simulation
 from repro.core.graphs import make_graph
+from repro.core.vectorized import DynamicGridRunner
+
+MSDS = (0.0, 0.1, 1.6, 6.4)
+IMODES = ("exact", "user", "mean")
 
 
 def avg_makespan(graph, sched, reps=3, **kw):
@@ -41,11 +48,21 @@ def main():
         b = avg_makespan(g, "blevel-gt", bandwidth=bw * MiB)
         print(f"  bw={bw:5d}MiB/s  random/blevel-gt = {r / b:.2f}")
 
-    print("== F4: MSD effect (normalised to msd=0) ==")
-    base = avg_makespan(g, "ws", msd=0.0)
-    for msd in (0.1, 1.6, 6.4):
-        m = avg_makespan(g, "ws", msd=msd, decision_delay=0.05)
-        print(f"  msd={msd:3.1f}s  norm_makespan={m / base:.3f}")
+    print("== F4 + F5: one batched (msd x imode) grid, greedy scheduler ==")
+    points = [dict(msd=m, decision_delay=0.05 if m else 0.0, imode=im,
+                   bandwidth=100 * MiB)
+              for m in MSDS for im in IMODES]
+    runner = DynamicGridRunner(g, "greedy", 32, 4)
+    ms, _ = runner(points)                     # compile + run
+    t0 = time.perf_counter()
+    ms, _ = runner(points)
+    wall = time.perf_counter() - t0
+    base = float(ms[0])                        # msd=0 / exact
+    for p, m in zip(points, ms):
+        print(f"  msd={p['msd']:3.1f}s imode={p['imode']:5s} "
+              f"norm_makespan={float(m) / base:.3f}")
+    print(f"  ({len(points)} simulations in one vmap call, "
+          f"{wall / len(points) * 1e3:.1f} ms/simulation warm)")
 
 
 if __name__ == "__main__":

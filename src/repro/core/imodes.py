@@ -94,3 +94,21 @@ IMODES = {"exact": ExactImode, "user": UserImode, "mean": MeanImode}
 
 def make_imode(name: str, graph) -> ImodeBase:
     return IMODES[name](graph)
+
+
+def encode_imode(graph, name: str):
+    """Dense-array view of an imode for the vectorized simulator
+    (DESIGN.md §3): ``(est_durations f32[T], est_sizes f32[O])`` — the
+    *estimates* a scheduler sees for unfinished tasks / unproduced objects.
+    The switch to true values for finished elements happens inside the
+    simulator loop (``where(done, true, estimate)``), mirroring
+    ``ImodeBase.duration``/``size``.
+    """
+    import numpy as np
+
+    if name not in IMODES:
+        raise KeyError(f"unknown imode {name!r} (have {sorted(IMODES)})")
+    im = IMODES[name](graph)      # single source of truth for estimates
+    dur = [im._estimate_duration(t) for t in graph.tasks]
+    size = [im._estimate_size(o) for o in graph.objects]
+    return (np.asarray(dur, np.float32), np.asarray(size, np.float32))

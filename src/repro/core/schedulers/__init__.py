@@ -6,10 +6,13 @@ from .gt import BlevelGTScheduler, TlevelGTScheduler, MCPGTScheduler
 from .others import (SingleScheduler, RandomScheduler, WorkStealingScheduler,
                      GeneticScheduler)
 from .fixed import FixedScheduler
+from .det import DetBlevelScheduler, GreedyWorkerScheduler
 from .genetic_vectorized import GeneticVectorizedScheduler
 
 SCHEDULERS = {
     "blevel": BlevelScheduler,
+    "blevel-det": DetBlevelScheduler,
+    "greedy": GreedyWorkerScheduler,
     "blevel-gt": BlevelGTScheduler,
     "tlevel": TlevelScheduler,
     "tlevel-gt": TlevelGTScheduler,
@@ -33,4 +36,5 @@ __all__ = ["SCHEDULERS", "make_scheduler", "SchedulerBase", "FixedScheduler",
            "BlevelScheduler", "TlevelScheduler", "MCPScheduler",
            "DLSScheduler", "ETFScheduler", "BlevelGTScheduler",
            "TlevelGTScheduler", "MCPGTScheduler", "SingleScheduler",
-           "RandomScheduler", "WorkStealingScheduler", "GeneticScheduler"]
+           "RandomScheduler", "WorkStealingScheduler", "GeneticScheduler",
+           "DetBlevelScheduler", "GreedyWorkerScheduler"]

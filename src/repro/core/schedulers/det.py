@@ -1,0 +1,100 @@
+"""Deterministic reference twins of the vectorized in-loop schedulers.
+
+The stochastic schedulers (paper: "a random choice when an
+indistinguishable decision occurs") cannot be replicated bit-for-bit
+inside ``jax.lax`` loops, so the vectorized simulator ships two
+schedulers whose every tie is broken by the smallest index instead.
+These classes are the event-driven (reference-simulator) implementations
+of exactly the same decision rules; the parity suite in
+``tests/test_vectorized_dynamic.py`` holds the two sides together
+(DESIGN.md §3).
+
+* ``blevel-det`` — blevel/HLFET list scheduling with earliest-start
+  worker selection, deterministic ties: task order by (-blevel, id),
+  worker by (est. start, id).  Mirrors
+  ``vectorized.scheduling.make_static_blevel_scheduler``.
+* ``greedy`` — ws-style greedy worker selection for ready tasks at every
+  invocation, no work stealing: worker by (estimated transfer cost,
+  queued load, id), tasks processed in id order, priority = rank in
+  decreasing estimated b-level.  Mirrors
+  ``vectorized.scheduling.make_greedy_placer``.
+"""
+from __future__ import annotations
+
+import random
+
+from ..worker import Assignment
+from .base import (SchedulerBase, EarliestStartPlacer, compute_blevel,
+                   topological_repair)
+
+
+def _rank_priorities(view):
+    """priority = T - rank in decreasing-estimated-b-level order (ties by
+    id): globally distinct, like ``vectorized.scheduling
+    .rank_priorities``."""
+    bl = compute_blevel(view)
+    tasks = sorted(view.graph.tasks, key=lambda t: (-bl[t], t.id))
+    return {t: float(len(tasks) - r) for r, t in enumerate(tasks)}
+
+
+class DetBlevelScheduler(SchedulerBase):
+    """Static blevel list scheduler with deterministic tie-breaks."""
+
+    name = "blevel-det"
+
+    def init(self, view):
+        super().init(view)
+        self._assigned = False
+
+    def schedule(self, new_ready, new_finished):
+        if self._assigned:
+            return []
+        self._assigned = True
+        view = self.view
+        bl = compute_blevel(view)
+        order = sorted(view.graph.tasks, key=lambda t: (-bl[t], t.id))
+        order = topological_repair(view.graph, order)
+        placer = EarliestStartPlacer(view, random.Random(0))
+        n = len(order)
+        out = []
+        for rank, t in enumerate(order):
+            best_w, best_s = None, None
+            for w in placer.candidates(t):      # worker id order
+                s = placer.est_start(t, w)
+                if best_s is None or s < best_s - 1e-9:
+                    best_w, best_s = w, s
+            placer.commit(t, best_w, best_s)
+            out.append(Assignment(t, best_w, priority=float(n - rank)))
+        return out
+
+
+class GreedyWorkerScheduler(SchedulerBase):
+    """ws-style greedy worker selection, deterministic, no stealing."""
+
+    name = "greedy"
+
+    def init(self, view):
+        super().init(view)
+        self._prio = _rank_priorities(view)
+        self._queued = {w: set() for w in view.workers}
+
+    def schedule(self, new_ready, new_finished):
+        view = self.view
+        for q in self._queued.values():         # drop started/finished
+            for t in list(q):
+                if view.is_finished(t) or view.is_running(t):
+                    q.discard(t)
+        out = []
+        for t in sorted(new_ready, key=lambda t: t.id):
+            if view.assigned_worker(t) is not None:
+                continue
+            best_w, best_key = None, None
+            for w in view.workers:              # worker id order
+                if w.cores < t.cpus:
+                    continue
+                key = (view.transfer_cost(t, w), len(self._queued[w]))
+                if best_key is None or key < best_key:
+                    best_w, best_key = w, key
+            out.append(Assignment(t, best_w, priority=self._prio[t]))
+            self._queued[best_w].add(t)
+        return out

@@ -30,6 +30,17 @@ from .worker import Worker, Assignment
 EPS = 1e-9
 
 
+def resolve_workers(workers):
+    """Shared cluster encoding: accept ``[Worker, ...]`` or a sequence of
+    per-worker core counts and return Worker objects.  Used by the
+    reference simulator, the benchmark harness and the vectorized parity
+    tests so every path names a cluster the same way."""
+    workers = list(workers)
+    if workers and isinstance(workers[0], int):
+        return [Worker(i, c) for i, c in enumerate(workers)]
+    return workers
+
+
 @dataclasses.dataclass
 class TaskRecord:
     worker: int
@@ -125,9 +136,7 @@ class Simulator:
                  msd: float = 0.0, decision_delay: float = 0.0,
                  max_events: int = None, trace: bool = False):
         self.graph = graph
-        if isinstance(workers, (list, tuple)) and workers and isinstance(workers[0], int):
-            workers = [Worker(i, c) for i, c in enumerate(workers)]
-        self.workers = workers
+        self.workers = resolve_workers(workers)
         self.scheduler = scheduler
         if isinstance(netmodel, str):
             netmodel = make_netmodel(netmodel, bandwidth)
@@ -362,5 +371,5 @@ class Simulator:
 
 def run_single_simulation(graph, n_workers, cores, scheduler, **kw) -> Report:
     """Convenience wrapper: homogeneous cluster ``n_workers x cores``."""
-    workers = [Worker(i, cores) for i in range(n_workers)]
-    return Simulator(graph, workers, scheduler, **kw).run()
+    return Simulator(graph, resolve_workers([cores] * n_workers),
+                     scheduler, **kw).run()

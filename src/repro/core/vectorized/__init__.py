@@ -1,6 +1,14 @@
 """Vectorized (TPU-native) ESTEE simulator."""
-from .sim import GraphSpec, encode_graph, make_simulator, simulate_batch
+from .sim import (GraphSpec, encode_graph, make_simulator, simulate_batch,
+                  make_dynamic_simulator, simulate_dynamic_grid,
+                  DynamicGridRunner)
+from .scheduling import (VEC_SCHEDULERS, make_static_blevel_scheduler,
+                         make_greedy_placer, make_blevel_fn, rank_priorities)
 from .waterfill import waterfill, waterfill_simple
 
 __all__ = ["GraphSpec", "encode_graph", "make_simulator", "simulate_batch",
+           "make_dynamic_simulator", "simulate_dynamic_grid",
+           "DynamicGridRunner",
+           "VEC_SCHEDULERS", "make_static_blevel_scheduler",
+           "make_greedy_placer", "make_blevel_fn", "rank_priorities",
            "waterfill", "waterfill_simple"]

@@ -1,0 +1,172 @@
+"""In-loop vectorized schedulers for the dynamic JAX simulator
+(DESIGN.md §3).
+
+These are the dense-array counterparts of the deterministic reference
+schedulers in ``repro.core.schedulers.det`` — same decisions, expressed as
+fixed-shape JAX ops so a whole (graph x scheduler x msd x imode) grid runs
+under one ``jax.vmap``:
+
+* ``make_static_blevel_scheduler`` — the paper's blevel/HLFET list
+  scheduler with the "simple estimation" earliest-start worker selection,
+  run once on imode-filtered estimates (mirrors ``DetBlevelScheduler``).
+* ``make_greedy_placer`` — a ws-style greedy worker selector invoked on
+  every (MSD-gated) scheduler invocation: each ready task goes to the
+  worker with minimal (estimated transfer cost, queued load, id)
+  (mirrors ``GreedyWorkerScheduler``; no work stealing).
+
+Indistinguishable decisions are broken by the smallest index instead of
+the RNG the stochastic reference schedulers use — both sides of the
+parity tests share that rule.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+VEC_SCHEDULERS = ("blevel", "greedy")
+
+
+def make_blevel_fn(spec):
+    """b-level from *estimated* durations (imode view at t=0); task ids
+    are a topological order by construction (``TaskGraph.new_task``), so
+    one reverse sweep suffices."""
+    T = spec.T
+    e_task = jnp.asarray(spec.edge_task)
+    e_obj = jnp.asarray(spec.edge_obj)
+    producer = jnp.asarray(spec.producer)
+
+    def blevel(est_dur):
+        def body(i, bl):
+            t = T - 1 - i
+            child = jnp.max(jnp.where(producer[e_obj] == t, bl[e_task], 0.0),
+                            initial=0.0)
+            return bl.at[t].set(est_dur[t] + child)
+
+        return jax.lax.fori_loop(0, T, body, jnp.zeros(T, jnp.float32))
+
+    return blevel
+
+
+def rank_priorities(bl):
+    """priority = T - rank in decreasing-b-level order (ties: smaller id).
+    Globally distinct, so downstream worker/download tie-breaks never
+    depend on float equality."""
+    T = bl.shape[0]
+    order = jnp.argsort(-bl, stable=True)
+    return (jnp.zeros(T, jnp.float32)
+            .at[order].set(jnp.float32(T) - jnp.arange(T, dtype=jnp.float32)))
+
+
+def make_static_blevel_scheduler(spec, n_workers, cores):
+    """Returns ``schedule(est_durations, est_sizes, bandwidth) ->
+    (assignment i32[T], priority f32[T])`` — pure JAX, vmap-able over the
+    estimate arrays (imodes) and bandwidth.
+
+    Worker selection is the earliest-start estimate over per-core free
+    times with uncontended transfer costs, committed task by task in
+    decreasing-b-level order — the same timeline model as
+    ``schedulers.base.EarliestStartPlacer``.
+    """
+    T, E, W = spec.T, spec.E, n_workers
+    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
+    C = int(cores.max())
+    e_task = jnp.asarray(spec.edge_task)
+    e_obj = jnp.asarray(spec.edge_obj)
+    producer = jnp.asarray(spec.producer)
+    cpus = jnp.asarray(spec.cpus)
+    cores_j = jnp.asarray(cores)
+    w_ids = jnp.arange(W)
+    blevel = make_blevel_fn(spec)
+
+    def schedule(est_dur, est_size, bandwidth):
+        est_dur = jnp.asarray(est_dur, jnp.float32)
+        est_size = jnp.asarray(est_size, jnp.float32)
+        bandwidth = jnp.asarray(bandwidth, jnp.float32)
+        bl = blevel(est_dur)
+        order = jnp.argsort(-bl, stable=True)       # rank -> task id
+        # per-worker core free times, sorted ascending; slots past a
+        # worker's core count are pinned at +inf
+        slots0 = jnp.where(jnp.arange(C)[None, :] < cores_j[:, None],
+                           0.0, jnp.inf).astype(jnp.float32)
+        xfer = est_size[e_obj] / bandwidth          # f32[E]
+
+        def body(r, st):
+            slots, aw, fin, prio = st
+            t = order[r]
+            mask_e = e_task == t
+            pw = aw[producer[e_obj]]                # parents placed earlier
+            pf = fin[producer[e_obj]]
+            ready_ew = pf[:, None] + jnp.where(
+                pw[:, None] == w_ids[None, :], 0.0, xfer[:, None])
+            data_ready = jnp.max(jnp.where(mask_e[:, None], ready_ew, 0.0),
+                                 axis=0, initial=0.0)          # f32[W]
+            core_ready = slots[:, cpus[t] - 1]      # cpus-th smallest
+            est = jnp.maximum(core_ready, data_ready)
+            est = jnp.where(cores_j >= cpus[t], est, jnp.inf)
+            w = jnp.argmin(est)                     # ties: smallest id
+            finish = est[w] + est_dur[t]
+            row = jnp.where(jnp.arange(C) < cpus[t], finish, slots[w])
+            slots = slots.at[w].set(jnp.sort(row))
+            return (slots, aw.at[t].set(w.astype(jnp.int32)),
+                    fin.at[t].set(finish),
+                    prio.at[t].set(jnp.float32(T) - r.astype(jnp.float32)))
+
+        _, aw, _, prio = jax.lax.fori_loop(
+            0, T, body, (slots0, jnp.zeros(T, jnp.int32),
+                         jnp.zeros(T, jnp.float32), jnp.zeros(T, jnp.float32)))
+        return aw, prio
+
+    return schedule
+
+
+def make_transfer_costs(spec, n_workers):
+    """Returns ``costs(size_now, missing_ow) -> f32[T, W]``: estimated
+    bytes to move so task t could run on worker w (``SimView
+    .transfer_cost`` as one segment-sum).  ``missing_ow``: bool[O, W],
+    object neither present at nor downloading to the worker."""
+    T, W = spec.T, n_workers
+    e_task = jnp.asarray(spec.edge_task)
+    e_obj = jnp.asarray(spec.edge_obj)
+
+    def costs(size_now, missing_ow):
+        contrib = size_now[e_obj][:, None] * missing_ow[e_obj]      # [E, W]
+        return jnp.zeros((T, W), jnp.float32).at[e_task].add(contrib)
+
+    return costs
+
+
+def make_greedy_placer(spec, n_workers, cores):
+    """Returns ``place(ready_unassigned, cost_tw, load0) -> i32[T]``
+    (proposed worker per task, -1 where none).
+
+    Tasks are processed in id order (the order ready events are collected
+    in the reference simulator); each goes to the worker minimising
+    (transfer cost, queued load, worker id), and placing a task bumps the
+    load its successors see — the same sequential rule as
+    ``GreedyWorkerScheduler.schedule``.
+    """
+    T, W = spec.T, n_workers
+    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
+    cpus = jnp.asarray(spec.cpus)
+    cores_j = jnp.asarray(cores)
+    BIG = jnp.int32(np.iinfo(np.int32).max)
+
+    def place(ready_unassigned, cost_tw, load0):
+        def body(t, st):
+            pw, load = st
+            active = ready_unassigned[t]
+            c = jnp.where(cores_j >= cpus[t], cost_tw[t], jnp.inf)
+            cand = c == jnp.min(c)
+            ld = jnp.where(cand, load, BIG)
+            cand = cand & (ld == jnp.min(ld))
+            w = jnp.argmax(cand).astype(jnp.int32)  # first = smallest id
+            pw = pw.at[t].set(jnp.where(active, w, pw[t]))
+            load = load.at[w].add(jnp.where(active, 1, 0))
+            return pw, load
+
+        pw, _ = jax.lax.fori_loop(
+            0, T, body, (jnp.full(T, -1, jnp.int32), load0))
+        return pw
+
+    return place

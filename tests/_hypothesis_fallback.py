@@ -1,0 +1,165 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+The tier-1 environment declares ``hypothesis`` in requirements-dev.txt, but
+the suite must also collect and run on machines where it cannot be
+installed.  ``conftest.py`` registers this module under the ``hypothesis``
+name only when the real package is missing.
+
+Covered surface (nothing more): ``@settings(max_examples=, deadline=)``,
+``@given(*strategies)``, and the strategies ``integers``, ``sampled_from``,
+``tuples`` and ``lists`` with ``.filter``.  Examples are drawn from a
+seeded PRNG, so runs are deterministic; there is no shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 50
+_SEED = 0x5EED
+
+
+class SearchStrategy:
+    def example(self, rng):
+        raise NotImplementedError
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base = base
+        self.pred = pred
+
+    def example(self, rng):
+        for _ in range(1000):
+            x = self.base.example(rng)
+            if self.pred(x):
+                return x
+        raise RuntimeError("filter predicate rejected 1000 examples")
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, fn):
+        self.base = base
+        self.fn = fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rng):
+        lo = self.min_value if self.min_value is not None else -(2 ** 16)
+        hi = self.max_value if self.max_value is not None else 2 ** 16
+        # bias towards the boundaries, like hypothesis does
+        if rng.random() < 0.15:
+            return rng.choice((lo, hi))
+        return rng.randint(lo, hi)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, parts):
+        self.parts = parts
+
+    def example(self, rng):
+        return tuple(p.example(rng) for p in self.parts)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size, max_size):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+def integers(min_value=None, max_value=None):
+    return _Integers(min_value, max_value)
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+def tuples(*parts):
+    return _Tuples(parts)
+
+
+def lists(elements, min_size=0, max_size=None):
+    return _Lists(elements, min_size, max_size)
+
+
+def given(*strats, **kw_strats):
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # positional strategies fill the rightmost parameters, like
+        # hypothesis; pass them by keyword so pytest fixtures (which
+        # arrive in kwargs) can coexist with drawn values
+        drawn_names = [p.name for p in params[len(params) - len(strats):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = {name: s.example(rng)
+                         for name, s in zip(drawn_names, strats)}
+                drawn.update({k: s.example(rng)
+                              for k, s in kw_strats.items()})
+                fn(*args, **kwargs, **drawn)
+        # hide the strategy-supplied parameters from pytest, which would
+        # otherwise look them up as fixtures
+        keep = [p for p in params[:len(params) - len(strats)]
+                if p.name not in kw_strats]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+    return decorate
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install():
+    """Register this module as ``hypothesis`` (+ ``.strategies``)."""
+    mod = sys.modules[__name__]
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "tuples", "lists",
+                 "SearchStrategy"):
+        setattr(strategies, name, getattr(mod, name))
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    hyp.__is_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

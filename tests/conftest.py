@@ -3,3 +3,14 @@ import sys
 
 # src-layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# property tests use hypothesis (declared in requirements-dev.txt); fall
+# back to the bundled deterministic shim when it is not installed so the
+# whole suite still collects and runs
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import install
+
+    install()

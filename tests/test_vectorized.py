@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import MiB
+from repro.core import TaskGraph as TaskGraph2
 from repro.core.simulator import Simulator
 from repro.core.worker import Worker
 from repro.core.schedulers.fixed import FixedScheduler
@@ -24,7 +25,8 @@ def both(g, W, cores, netmodel, seed, bw=100 * MiB):
     run = jax.jit(make_simulator(encode_graph(g), W, cores, netmodel))
     a = np.array([assign[t] for t in g.tasks], np.int32)
     p = np.array([prios[t] for t in g.tasks], np.float32)
-    ms, xfer = run(a, p, bandwidth=bw)
+    ms, xfer, ok = run(a, p, bandwidth=bw)
+    assert bool(ok)
     return rep, float(ms), float(xfer)
 
 
@@ -52,9 +54,32 @@ def test_vmap_batches_schedules():
     rng = np.random.default_rng(0)
     A = rng.integers(0, 4, (8, spec.T)).astype(np.int32)
     P = np.tile(np.arange(spec.T, 0, -1, dtype=np.float32), (8, 1))
-    ms, xfer = jax.jit(jax.vmap(lambda a, p: run(a, p)))(A, P)
+    ms, xfer, ok = jax.jit(jax.vmap(lambda a, p: run(a, p)))(A, P)
     assert ms.shape == (8,)
+    assert np.all(np.asarray(ok))
     assert np.all(np.isfinite(np.asarray(ms)))
     # batched results match one-at-a-time
-    m0, _ = jax.jit(run)(A[3], P[3])
+    m0, _, _ = jax.jit(run)(A[3], P[3])
     assert float(ms[3]) == pytest.approx(float(m0), rel=1e-6)
+
+
+def test_exhausted_budget_reports_not_nan():
+    """Satellite bugfix: an impossible schedule must raise a clear error
+    from simulate_batch (and flag ok=False from run), never leak NaN."""
+    import jax
+    from repro.core.vectorized import simulate_batch
+    g = make_graph("fork1", seed=0)
+    spec = encode_graph(g)
+    # max_steps=1 can never finish the graph -> ok must be False
+    run = make_simulator(spec, 4, 4, "maxmin", max_steps=1)
+    a = np.zeros(spec.T, np.int32)
+    p = np.arange(spec.T, 0, -1).astype(np.float32)
+    ms, _, ok = jax.jit(run)(a, p)
+    assert not bool(ok)
+    assert np.isnan(float(ms))
+    # a 4-cpu task on 1-core workers deadlocks the real budget too
+    g2 = TaskGraph2("stuck")
+    g2.new_task(1.0, cpus=4)
+    with pytest.raises(RuntimeError, match="event budget"):
+        simulate_batch(g2, np.zeros((1, 1), np.int32),
+                       np.ones((1, 1), np.float32), 2, 1)
