@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import collections
 
-from .common import sweep, emit, geomean
+from .common import sweep, emit
 
 
 def run(fast=True):

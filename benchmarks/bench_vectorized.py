@@ -12,14 +12,13 @@ from repro.core import MiB
 from repro.core.simulator import Simulator
 from repro.core.worker import Worker
 from repro.core.schedulers.fixed import FixedScheduler
-from repro.core.graphs import make_graph, random_graph
+from repro.core.graphs import make_graph
 from repro.core.vectorized import encode_graph, make_simulator
 from .common import geomean, write_csv
 
 
 def run(fast=True):
     import jax
-    import jax.numpy as jnp
     graphs = (["crossv", "fork1", "splitters"] if fast else
               ["crossv", "fork1", "splitters", "merge_neighbours",
                "conflux", "grid", "nestedcrossv"])

@@ -47,7 +47,9 @@ def sweep(rows_spec, reps=3):
 
 # the vectorized schedulers' deterministic reference twins, for
 # speedup/agreement baselines (see repro.core.schedulers.det)
-REF_TWIN = {"blevel": "blevel-det", "greedy": "greedy"}
+REF_TWIN = {"blevel": "blevel-det", "tlevel": "tlevel-det",
+            "mcp": "mcp-det", "etf": "etf-det", "random": "random-det",
+            "greedy": "greedy"}
 
 
 def sweep_vectorized(graph_name, scheduler, workers, cores, points,
@@ -79,7 +81,7 @@ def sweep_vectorized(graph_name, scheduler, workers, cores, points,
             "netmodel": netmodel, "imode": p.get("imode", "exact"),
             "msd": p.get("msd", 0.0),
             "decision_delay": p.get("decision_delay", 0.0),
-            "seed": 0, "makespan": float(m),
+            "seed": p.get("seed", 0), "makespan": float(m),
             "transferred_mib": float(x) / MiB,
             "wall_us": us_per_sim,
         })
@@ -94,7 +96,7 @@ def time_reference_twin(graph_name, scheduler, workers, cores, points,
     t0 = time.perf_counter()
     reps = []
     for p in points:
-        sched = make_scheduler(REF_TWIN[scheduler], seed=0)
+        sched = make_scheduler(REF_TWIN[scheduler], seed=p.get("seed", 0))
         ws = [Worker(i, cores) for i in range(workers)]
         reps.append(Simulator(
             g, ws, sched, netmodel=netmodel,
@@ -105,12 +107,13 @@ def time_reference_twin(graph_name, scheduler, workers, cores, points,
     return reps, wall / len(points) * 1e6
 
 
-def write_csv(name, rows):
-    os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, f"{name}.csv")
+def write_csv(name, rows, out_dir=None, fieldnames=None):
+    out_dir = OUT_DIR if out_dir is None else out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.csv")
     if rows:
         with open(path, "w", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w = csv.DictWriter(f, fieldnames=fieldnames or list(rows[0]))
             w.writeheader()
             w.writerows(rows)
     return path

@@ -8,7 +8,7 @@ import json
 import os
 
 from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
-from repro.launch.roofline import PEAK_FLOPS, HBM_BW, LINK_BW
+from repro.launch.roofline import HBM_BW
 
 DIR = "results/dryrun"
 

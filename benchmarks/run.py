@@ -14,12 +14,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: schedulers,netmodel,msd,imode,"
                          "transfers,worker_selection,vectorized,kernels,"
-                         "planner")
+                         "planner,survey")
     args = ap.parse_args()
 
     from . import (bench_schedulers, bench_netmodel, bench_msd,
                    bench_imode, bench_transfers, bench_worker_selection,
-                   bench_vectorized, bench_kernels, bench_planner)
+                   bench_vectorized, bench_kernels, bench_planner, survey)
     benches = {
         "schedulers": bench_schedulers,         # Fig 3 / Fig 11
         "worker_selection": bench_worker_selection,   # Fig 4
@@ -30,6 +30,7 @@ def main() -> None:
         "vectorized": bench_vectorized,         # §6.1 validation analogue
         "kernels": bench_kernels,               # Pallas kernel sweeps
         "planner": bench_planner,               # technique-on-LM-plans
+        "survey": survey,                       # paper-grid estee CSV
     }
     only = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

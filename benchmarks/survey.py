@@ -1,0 +1,179 @@
+"""Paper-grid survey runner (DESIGN.md §5).
+
+The paper's headline claim — neglected details (network model, scheduler
+internals, MSD, imodes) shift results by up to an order of magnitude —
+is demonstrated by a survey over the full (graph family x cluster x
+bandwidth x netmodel x scheduler x imode x msd) grid.  This runner
+sweeps that grid through the batched vectorized simulator (one jit+vmap
+call per (graph, cluster, scheduler, netmodel) runner; the whole
+bandwidth x imode x msd sub-grid is a single device call) and emits an
+estee-schema CSV::
+
+    graph_name, cluster_name, bandwidth, netmodel, scheduler_name,
+    imode, min_sched_interval, time, total_transfer
+
+into ``results/survey.csv`` (``bandwidth`` in MiB/s, ``time`` =
+makespan seconds, ``total_transfer`` in bytes, ``min_sched_interval`` =
+MSD seconds), plus honest agreement/speedup rows vs the reference
+event loop running each scheduler's deterministic twin
+(``results/survey_agreement.csv``).
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.survey --mini   # CI bench-smoke
+    PYTHONPATH=src python -m benchmarks.survey --full   # paper grid
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from repro.core import MiB
+from repro.core.graphs import encode_graph_batch, survey_names
+from repro.core.vectorized import DynamicGridRunner
+
+from .common import geomean, time_reference_twin, write_csv
+
+SCHEMA = ("graph_name", "cluster_name", "bandwidth", "netmodel",
+          "scheduler_name", "imode", "min_sched_interval", "time",
+          "total_transfer")
+
+OUT_DIR = os.environ.get("SURVEY_OUT", "results")
+
+# CI-sized: 1 graph per family, 1 cluster, but still >= 3 graph
+# families x >= 4 schedulers x 2 netmodels in batched jit+vmap calls
+MINI_GRID = dict(
+    graphs_per_family=1,
+    clusters=(("8x4", 8, 4),),
+    bandwidths_mib=(32, 256),
+    netmodels=("maxmin", "simple"),
+    schedulers=("blevel", "tlevel", "random", "etf", "greedy"),
+    imodes=("exact", "user"),
+    msds=(0.0, 0.1),
+)
+
+FULL_GRID = dict(
+    graphs_per_family=3,
+    clusters=(("8x4", 8, 4), ("16x4", 16, 4), ("32x4", 32, 4)),
+    bandwidths_mib=(32, 128, 512, 2048),
+    netmodels=("maxmin", "simple"),
+    schedulers=("blevel", "tlevel", "mcp", "random", "etf", "greedy"),
+    imodes=("exact", "user", "mean"),
+    msds=(0.0, 0.1),
+)
+
+
+def grid_points(grid):
+    """The (bandwidth x imode x msd) batch every runner executes in one
+    vmap call.  Static schedulers ignore msd beyond the initial
+    invocation; greedy is genuinely rate-limited by it."""
+    return [dict(bandwidth=bw * MiB, imode=im, msd=m,
+                 decision_delay=0.05 if m > 0 else 0.0)
+            for bw in grid["bandwidths_mib"]
+            for im in grid["imodes"]
+            for m in grid["msds"]]
+
+
+def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer):
+    """Map one runner's batched results onto the estee CSV schema."""
+    rows = []
+    for p, m, x in zip(points, ms, xfer):
+        rows.append({
+            "graph_name": gname,
+            "cluster_name": cname,
+            "bandwidth": p["bandwidth"] / MiB,
+            "netmodel": netmodel,
+            "scheduler_name": scheduler,
+            "imode": p["imode"],
+            "min_sched_interval": p["msd"],
+            "time": float(m),
+            "total_transfer": float(x),
+        })
+    return rows
+
+
+def survey(grid, out_dir=OUT_DIR, agreement=True):
+    """Run the whole grid; returns (rows, agreement_rows) and writes
+    ``survey.csv`` / ``survey_agreement.csv`` under ``out_dir``."""
+    points = grid_points(grid)
+    names = survey_names(grid["graphs_per_family"])
+    encoded = encode_graph_batch(names, seed=0)
+    rows, agree_rows = [], []
+    for gname in names:
+        g, spec = encoded[gname]
+        for cname, workers, cores in grid["clusters"]:
+            for sched in grid["schedulers"]:
+                for netmodel in grid["netmodels"]:
+                    runner = DynamicGridRunner(g, sched, workers, cores,
+                                               netmodel=netmodel, spec=spec)
+                    ms, xfer = runner(points)        # compile + run
+                    rows.extend(estee_rows(gname, cname, netmodel, sched,
+                                           points, ms, xfer))
+                    first = (cname == grid["clusters"][0][0]
+                             and netmodel == grid["netmodels"][0])
+                    if agreement and first:
+                        t0 = time.perf_counter()
+                        ms2, _ = runner(points)      # warm, steady state
+                        vec_us = ((time.perf_counter() - t0)
+                                  / len(points) * 1e6)
+                        reps, ref_us = time_reference_twin(
+                            gname, sched, workers, cores, points[:1],
+                            netmodel=netmodel)
+                        agree_rows.append({
+                            "graph_name": gname, "scheduler_name": sched,
+                            "cluster_name": cname, "netmodel": netmodel,
+                            "makespan_ratio":
+                                float(ms2[0]) / reps[0].makespan,
+                            "vec_us_per_sim": vec_us,
+                            "ref_us_per_sim": ref_us,
+                            "speedup": ref_us / vec_us,
+                        })
+    write_csv("survey", rows, out_dir=out_dir, fieldnames=list(SCHEMA))
+    write_csv("survey_agreement", agree_rows, out_dir=out_dir)
+    return rows, agree_rows
+
+
+def report(rows, agree_rows):
+    """Print the benchmark-driver ``name,us_per_call,derived`` rows."""
+    for a in agree_rows:
+        print(f"survey/agree_{a['graph_name']}/{a['scheduler_name']},"
+              f"{a['ref_us_per_sim']:.0f},{a['makespan_ratio']:.4f}")
+        print(f"survey/speedup_{a['graph_name']}/{a['scheduler_name']},"
+              f"{a['vec_us_per_sim']:.0f},{a['speedup']:.1f}")
+    if agree_rows:
+        print(f"survey/speedup_geomean,0,"
+              f"{geomean([a['speedup'] for a in agree_rows]):.2f}")
+    print(f"survey/rows,0,{len(rows)}")
+
+
+def run(fast=True):
+    """Entry point for ``benchmarks.run`` (--only survey)."""
+    rows, agree_rows = survey(MINI_GRID if fast else FULL_GRID)
+    report(rows, agree_rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--mini", action="store_true",
+                      help="CI-sized grid (default)")
+    mode.add_argument("--full", action="store_true",
+                      help="paper-scale grid (slow)")
+    ap.add_argument("--out", default=OUT_DIR,
+                    help=f"output directory (default {OUT_DIR!r})")
+    ap.add_argument("--no-agreement", action="store_true",
+                    help="skip the reference-loop agreement/speedup pass")
+    args = ap.parse_args()
+    grid = FULL_GRID if args.full else MINI_GRID
+    t0 = time.time()
+    rows, agree_rows = survey(grid, out_dir=args.out,
+                              agreement=not args.no_agreement)
+    report(rows, agree_rows)
+    print(f"# survey: {len(rows)} grid points in {time.time() - t0:.1f}s "
+          f"-> {os.path.join(args.out, 'survey.csv')}")
+
+
+if __name__ == "__main__":
+    main()

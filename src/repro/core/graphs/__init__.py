@@ -4,12 +4,18 @@ from __future__ import annotations
 import random
 
 from ..taskgraph import TaskGraph, MiB
+from . import elementary as _elementary, irw as _irw, pegasus as _pegasus
 from .elementary import ELEMENTARY
 from .irw import IRW
 from .pegasus import PEGASUS
 from .util import finish, tnormal
 
 DATASETS = {"elementary": ELEMENTARY, "irw": IRW, "pegasus": PEGASUS}
+
+# per-family survey representatives (ordered smallest-first by the
+# dataset modules); the survey runner slices these per grid size
+SURVEY_GRAPHS = {"elementary": _elementary.SURVEY, "irw": _irw.SURVEY,
+                 "pegasus": _pegasus.SURVEY}
 
 GENERATORS = {}
 for _ds in DATASETS.values():
@@ -27,6 +33,29 @@ def dataset_of(name: str) -> str:
         if name in gens:
             return ds
     raise KeyError(name)
+
+
+def survey_names(per_family: int = 1):
+    """First ``per_family`` survey representatives of every graph family,
+    in dataset order — the graph axis of the survey grid."""
+    out = []
+    for fam in DATASETS:
+        out.extend(SURVEY_GRAPHS[fam][:per_family])
+    return out
+
+
+def encode_graph_batch(names, seed: int = 0):
+    """Batch-encoding helper for grid sweeps: build each named graph and
+    its dense ``GraphSpec`` exactly once, returning ``{name: (graph,
+    spec)}`` — survey runners fan many (scheduler x cluster x netmodel)
+    runners out of one encoding (DESIGN.md §5)."""
+    from ..vectorized import encode_graph
+
+    out = {}
+    for name in names:
+        g = make_graph(name, seed=seed)
+        out[name] = (g, encode_graph(g))
+    return out
 
 
 def random_graph(seed: int, n_tasks: int = 20, edge_p: float = 0.25,

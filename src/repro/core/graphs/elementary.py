@@ -238,3 +238,7 @@ ELEMENTARY = {
     "grid": grid,
     "fern": fern,
 }
+
+# representatives for the paper-grid survey runner (benchmarks/survey.py),
+# smallest first so mini-grid CI passes stay cheap
+SURVEY = ("merge_triplets", "fork1", "size_stairs", "triplets")

@@ -149,3 +149,6 @@ IRW = {
     "mapreduce": mapreduce,
     "nestedcrossv": nestedcrossv,
 }
+
+# representatives for the paper-grid survey runner (benchmarks/survey.py)
+SURVEY = ("fastcrossv", "crossv", "crossvx")

@@ -214,3 +214,6 @@ PEGASUS = {
     "ligo": ligo,
     "sipht": sipht,
 }
+
+# representatives for the paper-grid survey runner (benchmarks/survey.py)
+SURVEY = ("sipht", "montage", "cybershake")

@@ -15,7 +15,7 @@ from __future__ import annotations
 import math
 import random
 
-from ..taskgraph import TaskGraph, MiB
+from ..taskgraph import TaskGraph
 
 
 def tnormal(rng: random.Random, mean, sd, lo=1e-3):

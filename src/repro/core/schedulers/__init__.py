@@ -6,7 +6,8 @@ from .gt import BlevelGTScheduler, TlevelGTScheduler, MCPGTScheduler
 from .others import (SingleScheduler, RandomScheduler, WorkStealingScheduler,
                      GeneticScheduler)
 from .fixed import FixedScheduler
-from .det import DetBlevelScheduler, GreedyWorkerScheduler
+from .det import (DetBlevelScheduler, DetTlevelScheduler, DetMCPScheduler,
+                  DetETFScheduler, DetRandomScheduler, GreedyWorkerScheduler)
 from .genetic_vectorized import GeneticVectorizedScheduler
 
 SCHEDULERS = {
@@ -15,16 +16,20 @@ SCHEDULERS = {
     "greedy": GreedyWorkerScheduler,
     "blevel-gt": BlevelGTScheduler,
     "tlevel": TlevelScheduler,
+    "tlevel-det": DetTlevelScheduler,
     "tlevel-gt": TlevelGTScheduler,
     "mcp": MCPScheduler,
+    "mcp-det": DetMCPScheduler,
     "mcp-gt": MCPGTScheduler,
     "dls": DLSScheduler,
     "etf": ETFScheduler,
+    "etf-det": DetETFScheduler,
     "genetic": GeneticScheduler,
     "genetic-vec": GeneticVectorizedScheduler,
     "ws": WorkStealingScheduler,
     "single": SingleScheduler,
     "random": RandomScheduler,
+    "random-det": DetRandomScheduler,
 }
 
 
@@ -37,4 +42,5 @@ __all__ = ["SCHEDULERS", "make_scheduler", "SchedulerBase", "FixedScheduler",
            "DLSScheduler", "ETFScheduler", "BlevelGTScheduler",
            "TlevelGTScheduler", "MCPGTScheduler", "SingleScheduler",
            "RandomScheduler", "WorkStealingScheduler", "GeneticScheduler",
-           "DetBlevelScheduler", "GreedyWorkerScheduler"]
+           "DetBlevelScheduler", "DetTlevelScheduler", "DetMCPScheduler",
+           "DetETFScheduler", "DetRandomScheduler", "GreedyWorkerScheduler"]

@@ -5,8 +5,7 @@ from __future__ import annotations
 
 from ..worker import Assignment
 from .base import (SchedulerBase, StaticListScheduler, EarliestStartPlacer,
-                   compute_blevel, compute_tlevel, compute_alap,
-                   topological_repair)
+                   compute_blevel, compute_tlevel, compute_alap)
 
 
 class BlevelScheduler(StaticListScheduler):

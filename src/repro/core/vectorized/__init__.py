@@ -2,13 +2,20 @@
 from .sim import (GraphSpec, encode_graph, make_simulator, simulate_batch,
                   make_dynamic_simulator, simulate_dynamic_grid,
                   DynamicGridRunner)
-from .scheduling import (VEC_SCHEDULERS, make_static_blevel_scheduler,
-                         make_greedy_placer, make_blevel_fn, rank_priorities)
+from .scheduling import (VEC_SCHEDULERS, make_vec_scheduler,
+                         make_static_blevel_scheduler,
+                         make_static_tlevel_scheduler,
+                         make_static_mcp_scheduler, make_etf_scheduler,
+                         make_random_scheduler, make_greedy_placer,
+                         make_blevel_fn, make_tlevel_fn, rank_priorities)
 from .waterfill import waterfill, waterfill_simple
 
 __all__ = ["GraphSpec", "encode_graph", "make_simulator", "simulate_batch",
            "make_dynamic_simulator", "simulate_dynamic_grid",
            "DynamicGridRunner",
-           "VEC_SCHEDULERS", "make_static_blevel_scheduler",
-           "make_greedy_placer", "make_blevel_fn", "rank_priorities",
+           "VEC_SCHEDULERS", "make_vec_scheduler",
+           "make_static_blevel_scheduler", "make_static_tlevel_scheduler",
+           "make_static_mcp_scheduler", "make_etf_scheduler",
+           "make_random_scheduler", "make_greedy_placer",
+           "make_blevel_fn", "make_tlevel_fn", "rank_priorities",
            "waterfill", "waterfill_simple"]

@@ -4,19 +4,33 @@
 These are the dense-array counterparts of the deterministic reference
 schedulers in ``repro.core.schedulers.det`` — same decisions, expressed as
 fixed-shape JAX ops so a whole (graph x scheduler x msd x imode) grid runs
-under one ``jax.vmap``:
+under one ``jax.vmap``.  ``VEC_SCHEDULERS`` maps each name to its kind:
 
-* ``make_static_blevel_scheduler`` — the paper's blevel/HLFET list
-  scheduler with the "simple estimation" earliest-start worker selection,
-  run once on imode-filtered estimates (mirrors ``DetBlevelScheduler``).
-* ``make_greedy_placer`` — a ws-style greedy worker selector invoked on
-  every (MSD-gated) scheduler invocation: each ready task goes to the
-  worker with minimal (estimated transfer cost, queued load, id)
-  (mirrors ``GreedyWorkerScheduler``; no work stealing).
+* ``"static"`` entries compute the whole ``task -> worker`` map plus
+  priorities from the t=0 imode estimates in one invocation
+  (``make_vec_scheduler`` returns the schedule function):
+
+  - ``blevel`` — blevel/HLFET list order (mirrors ``blevel-det``);
+  - ``tlevel`` — SCFET, ascending t-level (mirrors ``tlevel-det``);
+  - ``mcp``    — simplified MCP, ascending ALAP (mirrors ``mcp-det``;
+    with ALAP = CP - blevel this order coincides with ``blevel`` — kept
+    as its own entry so the registry mirrors the stochastic family);
+  - ``etf``    — ETF/DLS-style placer: at every step commit the
+    (frontier task, worker) pair with the earliest estimated start
+    (mirrors ``etf-det``);
+  - ``random`` — counter-based, seed-parameterized uniform choice over
+    eligible workers (mirrors ``random-det``; the seed is a traced
+    argument, so a whole seed batch runs under one ``vmap``).
+
+* ``"dynamic"`` entries run on every (MSD-gated) scheduler invocation:
+
+  - ``greedy`` — ws-style greedy worker selection: each ready task goes
+    to the worker with minimal (estimated transfer cost, queued load,
+    id) (mirrors ``greedy``; no work stealing).
 
 Indistinguishable decisions are broken by the smallest index instead of
 the RNG the stochastic reference schedulers use — both sides of the
-parity tests share that rule.
+parity tests (``tests/test_vectorized_dynamic.py``) share that rule.
 """
 from __future__ import annotations
 
@@ -24,7 +38,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-VEC_SCHEDULERS = ("blevel", "greedy")
+# name -> kind; membership == "has a vectorized in-loop implementation"
+VEC_SCHEDULERS = {
+    "blevel": "static",
+    "tlevel": "static",
+    "mcp": "static",
+    "etf": "static",
+    "random": "static",
+    "greedy": "dynamic",
+}
 
 
 def make_blevel_fn(spec):
@@ -48,6 +70,26 @@ def make_blevel_fn(spec):
     return blevel
 
 
+def make_tlevel_fn(spec):
+    """t-level (earliest possible start ignoring comm costs) from
+    estimated durations; forward sweep over the id-topological order."""
+    T = spec.T
+    e_task = jnp.asarray(spec.edge_task)
+    e_obj = jnp.asarray(spec.edge_obj)
+    producer = jnp.asarray(spec.producer)
+
+    def tlevel(est_dur):
+        def body(t, tl):
+            par = producer[e_obj]
+            reach = jnp.max(jnp.where(e_task == t, tl[par] + est_dur[par],
+                                      0.0), initial=0.0)
+            return tl.at[t].set(reach)
+
+        return jax.lax.fori_loop(0, T, body, jnp.zeros(T, jnp.float32))
+
+    return tlevel
+
+
 def rank_priorities(bl):
     """priority = T - rank in decreasing-b-level order (ties: smaller id).
     Globally distinct, so downstream worker/download tie-breaks never
@@ -58,17 +100,22 @@ def rank_priorities(bl):
             .at[order].set(jnp.float32(T) - jnp.arange(T, dtype=jnp.float32)))
 
 
-def make_static_blevel_scheduler(spec, n_workers, cores):
-    """Returns ``schedule(est_durations, est_sizes, bandwidth) ->
+def _make_static_list_scheduler(spec, n_workers, cores, order_fn):
+    """Shared static list-scheduling machinery: commit tasks in the order
+    ``order_fn(est_dur) -> i32[T]`` (rank -> task id), each to the
+    earliest-start worker.
+
+    Returns ``schedule(est_durations, est_sizes, bandwidth, seed) ->
     (assignment i32[T], priority f32[T])`` — pure JAX, vmap-able over the
-    estimate arrays (imodes) and bandwidth.
+    estimate arrays (imodes), bandwidth and seed (ignored here; the
+    uniform signature keeps every static scheduler batchable the same
+    way).
 
     Worker selection is the earliest-start estimate over per-core free
-    times with uncontended transfer costs, committed task by task in
-    decreasing-b-level order — the same timeline model as
-    ``schedulers.base.EarliestStartPlacer``.
+    times with uncontended transfer costs, committed task by task — the
+    same timeline model as ``schedulers.base.EarliestStartPlacer``.
     """
-    T, E, W = spec.T, spec.E, n_workers
+    T, W = spec.T, n_workers
     cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
     C = int(cores.max())
     e_task = jnp.asarray(spec.edge_task)
@@ -77,14 +124,13 @@ def make_static_blevel_scheduler(spec, n_workers, cores):
     cpus = jnp.asarray(spec.cpus)
     cores_j = jnp.asarray(cores)
     w_ids = jnp.arange(W)
-    blevel = make_blevel_fn(spec)
 
-    def schedule(est_dur, est_size, bandwidth):
+    def schedule(est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+        del seed
         est_dur = jnp.asarray(est_dur, jnp.float32)
         est_size = jnp.asarray(est_size, jnp.float32)
         bandwidth = jnp.asarray(bandwidth, jnp.float32)
-        bl = blevel(est_dur)
-        order = jnp.argsort(-bl, stable=True)       # rank -> task id
+        order = order_fn(est_dur)                   # rank -> task id
         # per-worker core free times, sorted ascending; slots past a
         # worker's core count are pinned at +inf
         slots0 = jnp.where(jnp.arange(C)[None, :] < cores_j[:, None],
@@ -94,13 +140,12 @@ def make_static_blevel_scheduler(spec, n_workers, cores):
         def body(r, st):
             slots, aw, fin, prio = st
             t = order[r]
-            mask_e = e_task == t
             pw = aw[producer[e_obj]]                # parents placed earlier
             pf = fin[producer[e_obj]]
             ready_ew = pf[:, None] + jnp.where(
                 pw[:, None] == w_ids[None, :], 0.0, xfer[:, None])
-            data_ready = jnp.max(jnp.where(mask_e[:, None], ready_ew, 0.0),
-                                 axis=0, initial=0.0)          # f32[W]
+            data_ready = jnp.max(jnp.where((e_task == t)[:, None], ready_ew,
+                                           0.0), axis=0, initial=0.0)
             core_ready = slots[:, cpus[t] - 1]      # cpus-th smallest
             est = jnp.maximum(core_ready, data_ready)
             est = jnp.where(cores_j >= cpus[t], est, jnp.inf)
@@ -118,6 +163,175 @@ def make_static_blevel_scheduler(spec, n_workers, cores):
         return aw, prio
 
     return schedule
+
+
+def make_static_blevel_scheduler(spec, n_workers, cores):
+    """blevel/HLFET: decreasing estimated b-level (ties: smaller id).
+    Decreasing b-level is topological for positive durations, so no
+    repair pass is needed (mirrors ``DetBlevelScheduler``)."""
+    blevel = make_blevel_fn(spec)
+
+    def order_fn(est_dur):
+        return jnp.argsort(-blevel(est_dur), stable=True)
+
+    return _make_static_list_scheduler(spec, n_workers, cores, order_fn)
+
+
+def make_static_tlevel_scheduler(spec, n_workers, cores):
+    """tlevel/SCFET: ascending estimated t-level (ties: smaller id);
+    topological for positive durations (mirrors ``DetTlevelScheduler``)."""
+    tlevel = make_tlevel_fn(spec)
+
+    def order_fn(est_dur):
+        return jnp.argsort(tlevel(est_dur), stable=True)
+
+    return _make_static_list_scheduler(spec, n_workers, cores, order_fn)
+
+
+def make_static_mcp_scheduler(spec, n_workers, cores):
+    """Simplified MCP: ascending ALAP = CP - blevel (ties: smaller id) —
+    the same simplification as the reference ``MCPScheduler`` (mirrors
+    ``DetMCPScheduler``)."""
+    blevel = make_blevel_fn(spec)
+
+    def order_fn(est_dur):
+        bl = blevel(est_dur)
+        return jnp.argsort(jnp.max(bl) - bl, stable=True)
+
+    return _make_static_list_scheduler(spec, n_workers, cores, order_fn)
+
+
+def make_etf_scheduler(spec, n_workers, cores):
+    """ETF/DLS-style earliest-finish placer: at every step pick, over all
+    frontier tasks (parents already committed) and eligible workers, the
+    pair with the lexicographically smallest (estimated start, -b-level,
+    task id, worker id) and commit it (mirrors ``DetETFScheduler``).
+
+    Same ``schedule(est_dur, est_size, bandwidth, seed)`` signature as
+    the list schedulers; T committing steps, each scanning the dense
+    [T, W] estimate matrix.
+    """
+    T, W = spec.T, n_workers
+    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
+    C = int(cores.max())
+    e_task = jnp.asarray(spec.edge_task)
+    e_obj = jnp.asarray(spec.edge_obj)
+    producer = jnp.asarray(spec.producer)
+    n_inputs = jnp.asarray(spec.n_inputs)
+    cpus = jnp.asarray(spec.cpus)
+    cores_j = jnp.asarray(cores)
+    blevel = make_blevel_fn(spec)
+    NEG = jnp.float32(-3e38)
+
+    def schedule(est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+        del seed
+        est_dur = jnp.asarray(est_dur, jnp.float32)
+        est_size = jnp.asarray(est_size, jnp.float32)
+        bandwidth = jnp.asarray(bandwidth, jnp.float32)
+        bl = blevel(est_dur)
+        slots0 = jnp.where(jnp.arange(C)[None, :] < cores_j[:, None],
+                           0.0, jnp.inf).astype(jnp.float32)
+        xfer = est_size[e_obj] / bandwidth          # f32[E]
+        eligible_tw = cores_j[None, :] >= cpus[:, None]       # [T, W]
+
+        def body(r, st):
+            slots, aw, fin, done, prio = st
+            par = producer[e_obj]
+            cnt = (jnp.zeros(T, jnp.int32)
+                   .at[e_task].add(done[par].astype(jnp.int32)))
+            frontier = ~done & (cnt >= n_inputs)
+            pw, pf = aw[par], fin[par]
+            ready_ew = pf[:, None] + jnp.where(
+                pw[:, None] == jnp.arange(W)[None, :], 0.0, xfer[:, None])
+            data_ready = (jnp.zeros((T, W), jnp.float32)
+                          .at[e_task].max(ready_ew))
+            core_ready = slots[:, cpus - 1].T       # [T, W]
+            est = jnp.maximum(core_ready, data_ready)
+            est = jnp.where(frontier[:, None] & eligible_tw, est, jnp.inf)
+            # lexicographic min of (est, -bl, task id, worker id)
+            flat_est = est.reshape(-1)
+            cand = flat_est == jnp.min(flat_est)
+            flat_bl = jnp.broadcast_to(bl[:, None], (T, W)).reshape(-1)
+            key = jnp.where(cand, flat_bl, NEG)
+            cand = cand & (key == jnp.max(key))
+            idx = jnp.argmax(cand)                  # first = smallest (t, w)
+            t, w = idx // W, idx % W
+            finish = flat_est[idx] + est_dur[t]
+            row = jnp.where(jnp.arange(C) < cpus[t], finish, slots[w])
+            slots = slots.at[w].set(jnp.sort(row))
+            return (slots, aw.at[t].set(w.astype(jnp.int32)),
+                    fin.at[t].set(finish), done.at[t].set(True),
+                    prio.at[t].set(jnp.float32(T) - r.astype(jnp.float32)))
+
+        _, aw, _, _, prio = jax.lax.fori_loop(
+            0, T, body, (slots0, jnp.zeros(T, jnp.int32),
+                         jnp.zeros(T, jnp.float32), jnp.zeros(T, bool),
+                         jnp.zeros(T, jnp.float32)))
+        return aw, prio
+
+    return schedule
+
+
+def _mix32(x):
+    """splitmix-style 32-bit finalizer; the pure-Python twin lives in
+    ``schedulers.det._mix32`` with the SAME constants (parity-tested)."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def make_random_scheduler(spec, n_workers, cores):
+    """Counter-based random static scheduler: task t goes to the
+    ``hash(seed, t) mod n_eligible``-th eligible worker (id order) —
+    stateless, so a whole seed batch vmaps (mirrors ``random-det``).
+    Priorities are the usual decreasing-estimated-b-level ranks."""
+    T, W = spec.T, n_workers
+    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
+    cpus = jnp.asarray(spec.cpus)
+    cores_j = jnp.asarray(cores)
+    blevel = make_blevel_fn(spec)
+
+    def schedule(est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+        del est_size, bandwidth
+        est_dur = jnp.asarray(est_dur, jnp.float32)
+        seed_u = jnp.asarray(seed).astype(jnp.uint32)
+        elig = cores_j[None, :] >= cpus[:, None]              # [T, W]
+        n_cand = jnp.sum(elig, axis=1).astype(jnp.uint32)     # >= 1
+        h = _mix32(seed_u * jnp.uint32(0x9E3779B9)
+                   + jnp.arange(T, dtype=jnp.uint32) + jnp.uint32(1))
+        k = (h % jnp.maximum(n_cand, 1)).astype(jnp.int32)
+        cum = jnp.cumsum(elig.astype(jnp.int32), axis=1)      # [T, W]
+        pick = elig & (cum == (k + 1)[:, None])
+        aw = jnp.argmax(pick, axis=1).astype(jnp.int32)
+        return aw, rank_priorities(blevel(est_dur))
+
+    return schedule
+
+
+_STATIC_FACTORIES = {
+    "blevel": make_static_blevel_scheduler,
+    "tlevel": make_static_tlevel_scheduler,
+    "mcp": make_static_mcp_scheduler,
+    "etf": make_etf_scheduler,
+    "random": make_random_scheduler,
+}
+
+
+def make_vec_scheduler(spec, n_workers, cores, name):
+    """Factory for the *static* vectorized schedulers: returns
+    ``schedule(est_durations, est_sizes, bandwidth, seed) ->
+    (assignment i32[T], priority f32[T])``, directly consumable by
+    ``make_simulator`` and used internally by ``make_dynamic_simulator``.
+    Raises for dynamic entries (``greedy`` has no one-shot schedule)."""
+    if name not in _STATIC_FACTORIES:
+        raise KeyError(
+            f"no static vectorized scheduler {name!r} "
+            f"(have {sorted(_STATIC_FACTORIES)}; "
+            f"dynamic: {sorted(k for k, v in VEC_SCHEDULERS.items() if v == 'dynamic')})")
+    return _STATIC_FACTORIES[name](spec, n_workers, cores)
 
 
 def make_transfer_costs(spec, n_workers):

@@ -24,13 +24,15 @@ Shared semantics mirror the reference simulator (``core.simulator``):
 * the Appendix-A task start rule incl. the priority/blocking guard;
 * max-min progressive filling recomputed at every event.
 
-Work stealing (``ws``) and the RNG-tie-break scheduler variants stay on
-the reference simulator — documented scoping in DESIGN.md §3.
+The static/list scheduler family (``blevel``/``tlevel``/``mcp``/``etf``/
+``random``) and the dynamic ``greedy`` run in-loop; rescheduling work
+stealing (``ws``), the in-loop genetic scheduler and the RNG-tie-break
+stochastic variants stay on the reference simulator — documented scoping
+in DESIGN.md §3.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 import jax
@@ -38,7 +40,7 @@ import jax.numpy as jnp
 
 from .waterfill import waterfill
 from .scheduling import (make_blevel_fn, make_greedy_placer,
-                         make_static_blevel_scheduler, make_transfer_costs,
+                         make_transfer_costs, make_vec_scheduler,
                          rank_priorities, VEC_SCHEDULERS)
 
 READY_BOOST = 1_000_000.0
@@ -74,7 +76,6 @@ class GraphSpec:
 
 def encode_graph(graph) -> GraphSpec:
     T = graph.task_count
-    O = graph.object_count
     durations = np.array([t.duration for t in graph.tasks], np.float32)
     cpus = np.array([t.cpus for t in graph.tasks], np.int32)
     sizes = np.array([o.size for o in graph.objects], np.float32)
@@ -328,13 +329,19 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
       ground truth.
 
     ``scheduler`` is one of ``vectorized.scheduling.VEC_SCHEDULERS``:
-    ``"blevel"`` (static list schedule computed from the t=0 estimates,
-    applied after the decision delay) or ``"greedy"`` (ws-style greedy
-    worker selection at every invocation).  Decisions match the
-    deterministic reference schedulers ``blevel-det`` / ``greedy``.
+    the *static* family (``blevel``, ``tlevel``, ``mcp``, ``etf``,
+    ``random`` — one schedule computed from the t=0 estimates, applied
+    after the decision delay) or the *dynamic* ``greedy`` (ws-style
+    greedy worker selection at every invocation).  Decisions match the
+    deterministic reference twins (``blevel-det``, ``tlevel-det``,
+    ``mcp-det``, ``etf-det``, ``random-det``, ``greedy`` —
+    ``schedulers/det.py``).
 
-    All five arguments are batchable under ``jax.vmap``, so a whole
-    (msd x decision_delay x imode x bandwidth) grid is one device call.
+    ``run`` also accepts a trailing ``seed`` (i32, default 0) consumed
+    by the counter-based ``random`` scheduler and ignored by the rest.
+    All six arguments are batchable under ``jax.vmap``, so a whole
+    (msd x decision_delay x imode x bandwidth x seed) grid is one
+    device call.
     Flows stay per input edge like the static path, but their
     destination — and the (object, destination) deduplication — is only
     known once the scheduler has assigned the consumer, so the dedup
@@ -344,7 +351,7 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
     """
     if scheduler not in VEC_SCHEDULERS:
         raise KeyError(f"unknown vectorized scheduler {scheduler!r} "
-                       f"(have {VEC_SCHEDULERS})")
+                       f"(have {sorted(VEC_SCHEDULERS)})")
     T, O, E, W = spec.T, spec.O, spec.E, n_workers
     F = O * W
     cores = np.broadcast_to(np.asarray(cores, np.int32), (W,)).copy()
@@ -356,7 +363,7 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
     if max_steps is None:
         max_steps = 10 * (T + E) + 8 * W + 1024
     simple = netmodel == "simple"
-    dynamic_sched = scheduler == "greedy"
+    dynamic_sched = VEC_SCHEDULERS[scheduler] == "dynamic"
 
     e_task = jnp.asarray(spec.edge_task)
     e_obj = jnp.asarray(spec.edge_obj)
@@ -370,18 +377,23 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
     e_bytes = sizes_true[e_obj]
 
     blevel = make_blevel_fn(spec)
-    static_schedule = make_static_blevel_scheduler(spec, W, cores)
-    greedy_place = make_greedy_placer(spec, W, cores)
+    if dynamic_sched:
+        static_schedule = None
+        greedy_place = make_greedy_placer(spec, W, cores)
+    else:
+        static_schedule = make_vec_scheduler(spec, W, cores, scheduler)
+        greedy_place = None
     transfer_costs = make_transfer_costs(spec, W)
 
     def run(est_durations, est_sizes, msd=jnp.float32(0.0),
             decision_delay=jnp.float32(0.0),
-            bandwidth=jnp.float32(100 * 1024 * 1024)):
+            bandwidth=jnp.float32(100 * 1024 * 1024), seed=jnp.int32(0)):
         est_dur = jnp.asarray(est_durations, jnp.float32)
         est_size = jnp.asarray(est_sizes, jnp.float32)
         msd_ = jnp.asarray(msd, jnp.float32)
         delay = jnp.asarray(decision_delay, jnp.float32)
         bandwidth_ = jnp.asarray(bandwidth, jnp.float32)
+        seed_ = jnp.asarray(seed, jnp.int32)
 
         if dynamic_sched:
             greedy_prio = rank_priorities(blevel(est_dur))
@@ -391,7 +403,8 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
         else:
             # static schedule == the single invocation at t=0, computed
             # from pure estimates; it reaches workers after the delay
-            aw0, prio0 = static_schedule(est_dur, est_size, bandwidth_)
+            aw0, prio0 = static_schedule(est_dur, est_size, bandwidth_,
+                                         seed_)
             p_worker0, p_prio0 = aw0, prio0
             p_time0 = jnp.full(T, 1.0, jnp.float32) * delay
 
@@ -618,14 +631,17 @@ class DynamicGridRunner:
     Build once, then call with any number of grid points; the compiled
     program and the per-imode estimate encodings are cached, so repeated
     sweeps (benchmark loops, GA generations, dashboards) pay tracing and
-    XLA compilation exactly once per batch shape.
+    XLA compilation exactly once per batch shape.  Pass a prebuilt
+    ``spec`` (``encode_graph(graph)``) to share the dense encoding when
+    many runners sweep the same graph (the survey runner does).
     """
 
     def __init__(self, graph, scheduler, n_workers, cores,
-                 netmodel="maxmin", max_steps=None):
+                 netmodel="maxmin", max_steps=None, spec=None):
         self.graph = graph
         self.scheduler = scheduler
-        spec = encode_graph(graph)
+        if spec is None:
+            spec = encode_graph(graph)
         self.run = make_dynamic_simulator(spec, n_workers, cores, scheduler,
                                           netmodel, max_steps=max_steps)
         self._fn = jax.jit(jax.vmap(self.run))
@@ -639,10 +655,11 @@ class DynamicGridRunner:
 
     def __call__(self, points):
         """``points``: iterable of dicts with keys ``msd``,
-        ``decision_delay``, ``imode`` and ``bandwidth`` (missing keys
-        default to 0 / "exact" / 100 MiB/s).  Returns ``(makespans
-        f32[N], transferred f32[N])`` in point order; raises if any grid
-        point exhausted its event budget."""
+        ``decision_delay``, ``imode``, ``bandwidth`` and ``seed``
+        (missing keys default to 0 / "exact" / 100 MiB/s / 0; ``seed``
+        only matters for the counter-based ``random`` scheduler).
+        Returns ``(makespans f32[N], transferred f32[N])`` in point
+        order; raises if any grid point exhausted its event budget."""
         points = list(points)
         if not points:
             raise ValueError("dynamic grid needs at least one point "
@@ -656,7 +673,8 @@ class DynamicGridRunner:
                       np.float32)
         BW = np.array([p.get("bandwidth", 100 * 1024 * 1024.0)
                        for p in points], np.float32)
-        ms, xfer, ok = self._fn(D, S, M, DD, BW)
+        SD = np.array([p.get("seed", 0) for p in points], np.int32)
+        ms, xfer, ok = self._fn(D, S, M, DD, BW, SD)
         _check_ok(ok, f"simulate_dynamic_grid({self.graph.name!r}, "
                       f"{self.scheduler!r})")
         return np.asarray(ms), np.asarray(xfer)

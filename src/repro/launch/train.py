@@ -13,7 +13,6 @@ A SIGTERM (preemption notice) triggers a final checkpoint before exit.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import signal
 import time
 

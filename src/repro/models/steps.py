@@ -2,15 +2,12 @@
 the trainer and the smoke tests)."""
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.optim import clip_by_global_norm
 from .config import ModelConfig
-from .transformer import (forward, prefill, decode_step, make_cache,
-                          NO_POLICY)
+from .transformer import forward, prefill, decode_step, NO_POLICY
 
 
 def softmax_cross_entropy(logits, labels):

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.taskgraph import TaskGraph
-from repro.launch.roofline import PEAK_FLOPS, LINK_BW
+from repro.launch.roofline import PEAK_FLOPS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +77,6 @@ def plan_assignment(g, plan: PipelinePlan):
     for t in g.tasks:
         kind, k = t.name[:3], int(t.name[3:])
         assign[t] = k
-        m = 0
         idx = t.id
         if plan.priority_rule == "micro":        # GPipe: finish fwd wave
             prio[t] = float(n - idx)

@@ -1,0 +1,115 @@
+"""Appendix-A download-slot limits: at most 4 concurrent downloads per
+worker, at most 2 from the same source worker (max-min model; the simple
+model is unlimited).  The reference simulator must enforce both caps on
+a graph that saturates them, and the vectorized simulator must agree on
+the resulting makespan (DESIGN.md §3)."""
+import numpy as np
+import pytest
+
+from repro.core import MiB, TaskGraph, Simulator
+from repro.core.netmodels import MaxMinFlowNetModel, SimpleNetModel
+from repro.core.schedulers.fixed import FixedScheduler
+from repro.core.simulator import resolve_workers
+from repro.core.vectorized import encode_graph, make_simulator
+
+BW = 100 * MiB
+
+
+def saturating_graph():
+    """8 producers split over two source workers, every output consumed
+    by one task on a third worker: 8 simultaneous download requests from
+    2 sources — wants 8 slots, Appendix A allows 2 + 2 = 4."""
+    g = TaskGraph("slot_saturation")
+    prods = [g.new_task(1.0, outputs=[100 * MiB], name="p")
+             for _ in range(8)]
+    g.new_task(0.5, inputs=[p.outputs[0] for p in prods], name="consume")
+    return g
+
+
+def fixed_assignment(g):
+    assignment = {t: (0 if t.name == "consume" else 1 + t.id // 4)
+                  for t in g.tasks}
+    n = len(g.tasks)
+    priorities = {t: float(n - t.id) for t in g.tasks}
+    return assignment, priorities
+
+
+class RecordingNet:
+    """Mixin recording peak concurrency per destination and per
+    (source, destination) pair as flows are admitted."""
+
+    def __init__(self, bandwidth):
+        super().__init__(bandwidth)
+        self.peak_per_dst = {}
+        self.peak_per_pair = {}
+
+    def add_flow(self, flow):
+        super().add_flow(flow)
+        dst = sum(1 for f in self.flows if f.dst == flow.dst)
+        pair = sum(1 for f in self.flows
+                   if f.dst == flow.dst and f.src == flow.src)
+        self.peak_per_dst[flow.dst] = max(
+            self.peak_per_dst.get(flow.dst, 0), dst)
+        key = (flow.src, flow.dst)
+        self.peak_per_pair[key] = max(self.peak_per_pair.get(key, 0), pair)
+
+
+class RecordingMaxMin(RecordingNet, MaxMinFlowNetModel):
+    pass
+
+
+class RecordingSimple(RecordingNet, SimpleNetModel):
+    pass
+
+
+def run_reference(g, netcls):
+    assignment, priorities = fixed_assignment(g)
+    net = netcls(BW)
+    rep = Simulator(g, resolve_workers([4, 4, 4]),
+                    FixedScheduler(assignment, priorities),
+                    netmodel=net).run()
+    return rep, net
+
+
+def run_vectorized(g, netmodel):
+    import jax
+    assignment, priorities = fixed_assignment(g)
+    spec = encode_graph(g)
+    a = np.array([assignment[t] for t in g.tasks], np.int32)
+    p = np.array([priorities[t] for t in g.tasks], np.float32)
+    run = jax.jit(make_simulator(spec, 3, 4, netmodel))
+    ms, xfer, ok = run(a, p, bandwidth=np.float32(BW))
+    assert bool(ok)
+    return float(ms), float(xfer)
+
+
+def test_reference_enforces_slot_limits():
+    g = saturating_graph()
+    rep, net = run_reference(g, RecordingMaxMin)
+    # the caps were respected at every admission...
+    assert max(net.peak_per_dst.values()) <= 4
+    assert max(net.peak_per_pair.values()) <= 2
+    # ...and genuinely saturated: 8 wanted, exactly 4 + 2/pair reached
+    assert net.peak_per_dst[0] == 4
+    assert net.peak_per_pair[(1, 0)] == 2
+    assert net.peak_per_pair[(2, 0)] == 2
+    assert rep.n_transfers == 8
+
+
+def test_simple_model_is_unlimited():
+    g = saturating_graph()
+    rep_simple, net = run_reference(g, RecordingSimple)
+    assert net.peak_per_dst[0] == 8          # all eight at once
+    rep_maxmin, _ = run_reference(g, RecordingMaxMin)
+    # slot limits + shared bandwidth must cost wall-clock time
+    assert rep_maxmin.makespan > rep_simple.makespan + 0.5
+
+
+@pytest.mark.parametrize("netmodel", ["maxmin", "simple"])
+def test_vectorized_agrees_on_saturated_slots(netmodel):
+    g = saturating_graph()
+    netcls = RecordingMaxMin if netmodel == "maxmin" else RecordingSimple
+    rep, _ = run_reference(g, netcls)
+    ms, xfer = run_vectorized(g, netmodel)
+    assert ms == pytest.approx(rep.makespan, rel=2e-3)
+    assert xfer == pytest.approx(rep.transferred_bytes, rel=1e-3)

@@ -3,7 +3,6 @@ mode (deliverable c)."""
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import attention, ssd, waterfill, ref

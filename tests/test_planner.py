@@ -1,6 +1,4 @@
 """Scheduler-in-the-loop planner (the paper's technique on LM plans)."""
-import pytest
-
 from repro.configs import get_config, SHAPES
 from repro.planner import PipelinePlan, plan_graph, plan_assignment, \
     autotune, simulate_plan

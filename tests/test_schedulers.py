@@ -130,7 +130,8 @@ def test_gt_heterogeneous_skip_rule():
     from repro.core import Simulator, Worker
     g = TaskGraph("het")
     big = g.new_task(10.0, cpus=4, name="big")
-    smalls = [g.new_task(1.0, cpus=1, name=f"s{i}") for i in range(6)]
+    for i in range(6):
+        g.new_task(1.0, cpus=1, name=f"s{i}")
     sched = make_scheduler("blevel-gt", seed=0)
     # one 4-core worker (only home for `big`) + two 2-core workers
     workers = [Worker(0, 4), Worker(1, 2), Worker(2, 2)]

@@ -28,6 +28,7 @@ def test_pipeline_host_sharding_partitions_batch():
     full = TokenPipeline(cfg).batch(5)["tokens"]
     parts = [TokenPipeline(cfg, host_id=h, num_hosts=2).batch(5)["tokens"]
              for h in range(2)]
+    assert full.shape == (8, 8)
     assert parts[0].shape == (4, 8)
     # different hosts produce different slices
     assert not np.array_equal(parts[0], parts[1])
@@ -102,7 +103,7 @@ def test_trainer_checkpoint_restart(tmp_path):
     ckpt = str(tmp_path / "ck")
     args = ["--arch", "mamba2-130m", "--smoke", "--batch", "2",
             "--seq", "16", "--ckpt-dir", ckpt, "--ckpt-every", "3"]
-    l1 = main(args + ["--steps", "6"])      # "preempted" at step 6
+    main(args + ["--steps", "6"])           # "preempted" at step 6
     l2 = main(args + ["--steps", "9"])      # restart, runs 6..9
     l3 = main(["--arch", "mamba2-130m", "--smoke", "--batch", "2",
                "--seq", "16", "--steps", "9",

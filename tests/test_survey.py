@@ -1,0 +1,71 @@
+"""Survey-runner plumbing (benchmarks/survey.py) without running sims:
+estee CSV schema, grid expansion, graph batch-encoding helpers, and the
+counter-based hash shared by the ``random``/``random-det`` twins."""
+import numpy as np
+
+from benchmarks import survey
+from repro.core.graphs import (DATASETS, SURVEY_GRAPHS, encode_graph_batch,
+                               survey_names)
+from repro.core.schedulers.det import counter_choice
+
+
+def test_schema_matches_estee_frame():
+    assert survey.SCHEMA == ("graph_name", "cluster_name", "bandwidth",
+                             "netmodel", "scheduler_name", "imode",
+                             "min_sched_interval", "time", "total_transfer")
+
+
+def test_grid_points_expansion():
+    pts = survey.grid_points(survey.MINI_GRID)
+    g = survey.MINI_GRID
+    assert len(pts) == (len(g["bandwidths_mib"]) * len(g["imodes"])
+                        * len(g["msds"]))
+    for p in pts:
+        assert p["decision_delay"] == (0.05 if p["msd"] > 0 else 0.0)
+    # acceptance floor: >= 3 graph families x >= 4 schedulers x 2 netmodels
+    assert len(survey_names(g["graphs_per_family"])) >= 3
+    assert len(g["schedulers"]) >= 4
+    assert len(g["netmodels"]) == 2
+
+
+def test_estee_rows_schema():
+    pts = survey.grid_points(survey.MINI_GRID)
+    rows = survey.estee_rows("fork1", "8x4", "maxmin", "etf", pts,
+                             np.arange(len(pts), dtype=np.float32),
+                             np.zeros(len(pts), np.float32))
+    assert len(rows) == len(pts)
+    assert all(tuple(r) == survey.SCHEMA for r in rows)
+    assert rows[0]["bandwidth"] == survey.MINI_GRID["bandwidths_mib"][0]
+
+
+def test_survey_graphs_cover_every_family():
+    assert set(SURVEY_GRAPHS) == set(DATASETS)
+    for fam, names in SURVEY_GRAPHS.items():
+        assert names, fam
+        for n in names:
+            assert n in DATASETS[fam], (fam, n)
+    names = survey_names(2)
+    assert len(names) == sum(min(2, len(v)) for v in SURVEY_GRAPHS.values())
+
+
+def test_encode_graph_batch_builds_specs_once():
+    batch = encode_graph_batch(["fastcrossv", "sipht"], seed=0)
+    g, spec = batch["fastcrossv"]
+    assert g.task_count == spec.T and g.object_count == spec.O
+
+
+def test_counter_hash_matches_vectorized_twin():
+    """The pure-Python counter hash (random-det) and the JAX one
+    (vectorized random) must be bit-identical."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.vectorized.scheduling import _mix32
+
+    seeds = np.array([0, 1, 7, 12345], np.uint32)
+    ctrs = np.arange(50, dtype=np.uint32)
+    for s in seeds:
+        jx = jax.jit(lambda c: _mix32(
+            jnp.uint32(s) * jnp.uint32(0x9E3779B9) + c + jnp.uint32(1)))(ctrs)
+        for c, h in zip(ctrs, np.asarray(jx)):
+            for n in (1, 2, 3, 8):
+                assert counter_choice(int(s), int(c), n) == int(h) % n

@@ -2,7 +2,7 @@
 import pytest
 
 from repro.core import TaskGraph, MiB, GiB
-from repro.core.graphs import make_graph, GRAPH_NAMES, dataset_of
+from repro.core.graphs import make_graph, GRAPH_NAMES
 
 # Table 1 of the paper: name -> (#T, #O, TS GiB, LP); None = not asserted
 TABLE1 = {

@@ -20,6 +20,11 @@ from repro.core.vectorized import (encode_graph, make_dynamic_simulator,
 MSDS = (0.0, 0.1, 1.6)
 DELAYS = (0.0, 0.05)
 IMODES = ("exact", "user", "mean")
+BANDWIDTHS = (32 * MiB, 100 * MiB, 400 * MiB)
+# every VEC_SCHEDULERS entry and its deterministic reference twin
+FAMILY_PAIRS = [("blevel", "blevel-det"), ("tlevel", "tlevel-det"),
+                ("mcp", "mcp-det"), ("etf", "etf-det"),
+                ("random", "random-det"), ("greedy", "greedy")]
 
 
 def mini_fork(n=6):
@@ -80,7 +85,7 @@ GRAPHS = {
 def reference_grid(g, sched_name, W, cores, points, netmodel):
     out = []
     for p in points:
-        sched = make_scheduler(sched_name, seed=0)
+        sched = make_scheduler(sched_name, seed=p.get("seed", 0))
         out.append(Simulator(
             g, resolve_workers([cores] * W), sched, netmodel=netmodel,
             bandwidth=p["bandwidth"], imode=p["imode"], msd=p["msd"],
@@ -110,6 +115,48 @@ def test_dynamic_grid_matches_reference(gname, vec_sched, ref_sched,
         assert float(m) == pytest.approx(rep.makespan, rel=2e-3), label
         assert float(x) == pytest.approx(rep.transferred_bytes,
                                          rel=1e-3, abs=1.0), label
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+@pytest.mark.parametrize("vec_sched,ref_sched",
+                         [("tlevel", "tlevel-det"), ("mcp", "mcp-det"),
+                          ("etf", "etf-det"), ("random", "random-det")])
+@pytest.mark.parametrize("netmodel", ["maxmin", "simple"])
+def test_scheduler_family_parity_across_bandwidths(gname, vec_sched,
+                                                   ref_sched, netmodel):
+    """Acceptance grid for the vectorized scheduler family: every new
+    ``VEC_SCHEDULERS`` entry matches its deterministic reference twin to
+    float32 tolerance over >= 3 graph families x 2 netmodels x >= 3
+    bandwidths (these are all static schedulers, so msd=0 and the grid
+    sweeps delay x imode x bandwidth — plus seeds for ``random``)."""
+    make, W, cores = GRAPHS[gname]
+    g = make()
+    seeds = (0, 3) if vec_sched == "random" else (0,)
+    points = [dict(msd=0.0, decision_delay=d, imode=im, bandwidth=bw,
+                   seed=s)
+              for bw in BANDWIDTHS for d in DELAYS for im in IMODES
+              for s in seeds]
+    refs = reference_grid(g, ref_sched, W, cores, points, netmodel)
+    ms, xfer = simulate_dynamic_grid(g, vec_sched, W, cores, points,
+                                     netmodel=netmodel)
+    for p, rep, m, x in zip(points, refs, ms, xfer):
+        label = f"{gname}/{vec_sched}/{netmodel}/{p}"
+        assert float(m) == pytest.approx(rep.makespan, rel=2e-3), label
+        assert float(x) == pytest.approx(rep.transferred_bytes,
+                                         rel=1e-3, abs=1.0), label
+
+
+def test_random_seed_axis_changes_assignment():
+    """The counter-based random scheduler is genuinely seed-parameterized:
+    different seeds in one batched grid give different placements (and
+    generally different makespans), identical seeds identical ones."""
+    make, W, cores = GRAPHS["mini_merge"]
+    g = make()
+    points = [dict(imode="exact", bandwidth=100 * MiB, seed=s)
+              for s in (0, 0, 1, 2, 3, 4)]
+    ms, _ = simulate_dynamic_grid(g, "random", W, cores, points)
+    assert float(ms[0]) == float(ms[1])          # same seed, same world
+    assert len({round(float(m), 6) for m in ms}) > 1, ms
 
 
 def test_dynamic_matches_reference_fastcrossv():
@@ -173,6 +220,31 @@ def test_static_and_dynamic_loops_agree():
         assert bool(ok_s)
         assert float(ms_s) == pytest.approx(float(ms_d[0]), rel=1e-5), imode
         assert float(xf_s) == pytest.approx(float(xf_d[0]), rel=1e-5), imode
+
+
+def test_every_static_scheduler_usable_from_both_simulators():
+    """``make_vec_scheduler`` output feeds the *static* simulator
+    directly, and must reproduce the dynamic simulator's msd=0/delay=0
+    result for every static ``VEC_SCHEDULERS`` entry."""
+    import jax
+    from repro.core.vectorized import (VEC_SCHEDULERS, make_simulator,
+                                       make_vec_scheduler)
+    g = mini_merge()
+    spec = encode_graph(g)
+    W, cores, bw = 4, 2, 100 * MiB
+    d, s = encode_imode(g, "user")
+    for name, kind in VEC_SCHEDULERS.items():
+        if kind != "static":
+            continue
+        aw, prio = jax.jit(make_vec_scheduler(spec, W, cores, name))(
+            d, s, np.float32(bw), np.int32(2))
+        ms_s, xf_s, ok_s = jax.jit(make_simulator(spec, W, cores))(
+            aw, prio, bandwidth=np.float32(bw))
+        ms_d, xf_d = simulate_dynamic_grid(
+            g, name, W, cores, [dict(imode="user", bandwidth=bw, seed=2)])
+        assert bool(ok_s), name
+        assert float(ms_s) == pytest.approx(float(ms_d[0]), rel=1e-5), name
+        assert float(xf_s) == pytest.approx(float(xf_d[0]), rel=1e-5), name
 
 
 def test_imodes_feed_scheduler_not_reality():
