@@ -9,7 +9,8 @@ import csv
 import os
 import time
 
-from repro.core import MiB, make_scheduler, Simulator, Worker
+from repro.core import (MiB, make_scheduler, resolve_workers, Simulator,
+                        Worker)
 from repro.core.graphs import make_graph
 
 OUT_DIR = os.environ.get("BENCH_OUT", "results/bench")
@@ -91,13 +92,16 @@ def sweep_vectorized(graph_name, scheduler, workers, cores, points,
 def time_reference_twin(graph_name, scheduler, workers, cores, points,
                         netmodel="maxmin", graph_seed=0):
     """Per-simulation wall time of the reference simulator running the
-    deterministic twin of a vectorized scheduler over ``points``."""
+    deterministic twin of a vectorized scheduler over ``points``.
+    ``cores`` may be a scalar or a per-worker list (hetero cluster)."""
     g = make_graph(graph_name, seed=graph_seed)
+    cores_l = (list(cores) if hasattr(cores, "__len__")
+               else [cores] * workers)
     t0 = time.perf_counter()
     reps = []
     for p in points:
         sched = make_scheduler(REF_TWIN[scheduler], seed=p.get("seed", 0))
-        ws = [Worker(i, cores) for i in range(workers)]
+        ws = resolve_workers(list(cores_l))
         reps.append(Simulator(
             g, ws, sched, netmodel=netmodel,
             bandwidth=p.get("bandwidth", 100 * MiB),

@@ -4,10 +4,21 @@ The paper's headline claim — neglected details (network model, scheduler
 internals, MSD, imodes) shift results by up to an order of magnitude —
 is demonstrated by a survey over the full (graph family x cluster x
 bandwidth x netmodel x scheduler x imode x msd) grid.  This runner
-sweeps that grid through the batched vectorized simulator (one jit+vmap
-call per (graph, cluster, scheduler, netmodel) runner; the whole
-bandwidth x imode x msd sub-grid is a single device call) and emits an
-estee-schema CSV::
+sweeps that grid through the batched vectorized simulator: graphs are
+padded into shape buckets (``vectorized.specs.pad_specs``) and the grid
+is grouped by (bucket, cluster signature, scheduler, netmodel) — one
+``BucketedGridRunner`` jit compilation per group executes the whole
+[graphs x bandwidth x imode x msd] sub-grid as a single device call.
+The measured jit-trace count must equal the group count
+(``--assert-compiles``; CI's bench-smoke regression gate against silent
+per-graph recompiles).
+
+Clusters are named by the shared grammar ``repro.core.parse_cluster``:
+homogeneous ``8x4`` or heterogeneous ``1x8+4x2`` (one 8-core worker plus
+four 2-core workers — the per-worker ``cores`` vector rides the same
+compiled program).
+
+It emits an estee-schema CSV::
 
     graph_name, cluster_name, bandwidth, netmodel, scheduler_name,
     imode, min_sched_interval, time, total_transfer
@@ -16,7 +27,10 @@ into ``results/survey.csv`` (``bandwidth`` in MiB/s, ``time`` =
 makespan seconds, ``total_transfer`` in bytes, ``min_sched_interval`` =
 MSD seconds), plus honest agreement/speedup rows vs the reference
 event loop running each scheduler's deterministic twin
-(``results/survey_agreement.csv``).
+(``results/survey_agreement.csv``, now with per-group ``bucket`` /
+``group_size`` / ``compile_count`` columns and a ``__pergraph_path__``
+row comparing one bucket compilation against the PR-2 one-runner-per-
+graph path).
 
 CLI::
 
@@ -27,11 +41,13 @@ from __future__ import annotations
 
 import argparse
 import os
+import sys
 import time
 
-from repro.core import MiB
+from repro.core import MiB, parse_cluster
 from repro.core.graphs import encode_graph_batch, survey_names
-from repro.core.vectorized import DynamicGridRunner
+from repro.core.vectorized import (BucketedGridRunner, DynamicGridRunner,
+                                   jit_trace_count)
 
 from .common import geomean, time_reference_twin, write_csv
 
@@ -39,23 +55,30 @@ SCHEMA = ("graph_name", "cluster_name", "bandwidth", "netmodel",
           "scheduler_name", "imode", "min_sched_interval", "time",
           "total_transfer")
 
+AGREE_SCHEMA = ("graph_name", "scheduler_name", "cluster_name", "netmodel",
+                "bucket", "group_size", "compile_count", "makespan_ratio",
+                "vec_us_per_sim", "ref_us_per_sim", "speedup",
+                "bucket_cold_s", "pergraph_cold_s", "total_compiles",
+                "bucket_groups")
+
 OUT_DIR = os.environ.get("SURVEY_OUT", "results")
 
-# CI-sized: 1 graph per family, 1 cluster, but still >= 3 graph
-# families x >= 4 schedulers x 2 netmodels in batched jit+vmap calls
+# CI-sized: 1 graph per family (all three representatives share the T160
+# shape bucket, so every (cluster, scheduler, netmodel) combination is
+# exactly one compilation), 2 clusters incl. one heterogeneous
 MINI_GRID = dict(
     graphs_per_family=1,
-    clusters=(("8x4", 8, 4),),
+    clusters=("8x4", "1x8+4x2"),
     bandwidths_mib=(32, 256),
     netmodels=("maxmin", "simple"),
-    schedulers=("blevel", "tlevel", "random", "etf", "greedy"),
+    schedulers=("blevel", "random", "etf", "greedy"),
     imodes=("exact", "user"),
     msds=(0.0, 0.1),
 )
 
 FULL_GRID = dict(
     graphs_per_family=3,
-    clusters=(("8x4", 8, 4), ("16x4", 16, 4), ("32x4", 32, 4)),
+    clusters=("8x4", "16x4", "32x4", "1x8+4x2"),
     bandwidths_mib=(32, 128, 512, 2048),
     netmodels=("maxmin", "simple"),
     schedulers=("blevel", "tlevel", "mcp", "random", "etf", "greedy"),
@@ -76,7 +99,7 @@ def grid_points(grid):
 
 
 def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer):
-    """Map one runner's batched results onto the estee CSV schema."""
+    """Map one graph's batched results onto the estee CSV schema."""
     rows = []
     for p, m, x in zip(points, ms, xfer):
         rows.append({
@@ -93,64 +116,146 @@ def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer):
     return rows
 
 
+def agreement_pass(grid, points, encoded, groups, runners, stats):
+    """Agreement/speedup rows for the first (cluster, netmodel): per
+    graph the bucketed makespan vs the reference twin, per group the
+    warm batched per-sim time, and one ``__pergraph_path__`` row timing
+    the whole first bucket against PR-2-style per-graph runners
+    (compile + run each — the cost the bucketing removes).  The sentinel
+    row also persists the sweep-wide ``total_compiles``/``bucket_groups``
+    so the cross-PR trend view can track compile regressions."""
+    cname = grid["clusters"][0]
+    cores = parse_cluster(cname)
+    netmodel = grid["netmodels"][0]
+    agree_rows = []
+    for sched in grid["schedulers"]:
+        for gi, grp in enumerate(groups):
+            runner, _ = runners[(cname, sched, netmodel, gi)]
+            t0 = time.perf_counter()
+            ms2, _ = runner(points)              # warm, steady state
+            vec_us = ((time.perf_counter() - t0)
+                      / (runner.B * len(points)) * 1e6)
+            for b, gname in enumerate(grp.names):
+                reps, ref_us = time_reference_twin(
+                    gname, sched, len(cores), cores, points[:1],
+                    netmodel=netmodel)
+                agree_rows.append({
+                    "graph_name": gname, "scheduler_name": sched,
+                    "cluster_name": cname, "netmodel": netmodel,
+                    "bucket": grp.label, "group_size": runner.B,
+                    "compile_count": 1,
+                    "makespan_ratio": float(ms2[b, 0]) / reps[0].makespan,
+                    "vec_us_per_sim": vec_us,
+                    "ref_us_per_sim": ref_us,
+                    "speedup": ref_us / vec_us,
+                })
+    # the compile-amortisation row: B per-graph runners (each pays its
+    # own jit trace) vs the one bucketed compilation recorded cold
+    sched = grid["schedulers"][0]
+    grp = groups[0]
+    runner, bucket_cold = runners[(cname, sched, netmodel, 0)]
+    t0 = time.perf_counter()
+    for gname in grp.names:
+        g, spec = encoded[gname]
+        DynamicGridRunner(g, sched, len(cores), cores, netmodel=netmodel,
+                          spec=spec)(points)
+    pergraph_cold = time.perf_counter() - t0
+    agree_rows.append({
+        "graph_name": "__pergraph_path__", "scheduler_name": sched,
+        "cluster_name": cname, "netmodel": netmodel,
+        "bucket": grp.label, "group_size": runner.B,
+        "compile_count": runner.B,
+        "bucket_cold_s": round(bucket_cold, 3),
+        "pergraph_cold_s": round(pergraph_cold, 3),
+        "speedup": pergraph_cold / bucket_cold,
+        "total_compiles": stats["compiles"],
+        "bucket_groups": stats["bucket_groups"],
+    })
+    return agree_rows
+
+
 def survey(grid, out_dir=OUT_DIR, agreement=True):
-    """Run the whole grid; returns (rows, agreement_rows) and writes
-    ``survey.csv`` / ``survey_agreement.csv`` under ``out_dir``."""
+    """Run the whole grid; returns (rows, agreement_rows, stats) and
+    writes ``survey.csv`` / ``survey_agreement.csv`` under ``out_dir``.
+    ``stats`` carries the measured jit compile count vs the expected
+    one-per-(bucket, cluster, scheduler, netmodel) group count."""
     points = grid_points(grid)
     names = survey_names(grid["graphs_per_family"])
-    encoded = encode_graph_batch(names, seed=0)
-    rows, agree_rows = [], []
-    for gname in names:
-        g, spec = encoded[gname]
-        for cname, workers, cores in grid["clusters"]:
-            for sched in grid["schedulers"]:
-                for netmodel in grid["netmodels"]:
-                    runner = DynamicGridRunner(g, sched, workers, cores,
-                                               netmodel=netmodel, spec=spec)
-                    ms, xfer = runner(points)        # compile + run
-                    rows.extend(estee_rows(gname, cname, netmodel, sched,
-                                           points, ms, xfer))
-                    first = (cname == grid["clusters"][0][0]
-                             and netmodel == grid["netmodels"][0])
-                    if agreement and first:
-                        t0 = time.perf_counter()
-                        ms2, _ = runner(points)      # warm, steady state
-                        vec_us = ((time.perf_counter() - t0)
-                                  / len(points) * 1e6)
-                        reps, ref_us = time_reference_twin(
-                            gname, sched, workers, cores, points[:1],
-                            netmodel=netmodel)
-                        agree_rows.append({
-                            "graph_name": gname, "scheduler_name": sched,
-                            "cluster_name": cname, "netmodel": netmodel,
-                            "makespan_ratio":
-                                float(ms2[0]) / reps[0].makespan,
-                            "vec_us_per_sim": vec_us,
-                            "ref_us_per_sim": ref_us,
-                            "speedup": ref_us / vec_us,
-                        })
+    encoded, groups = encode_graph_batch(names, seed=0, bucket=True)
+    rows = []
+    runners = {}                 # only the agreement slice is retained
+    est_caches = [{} for _ in groups]    # shared per bucket, not per runner
+    trace0 = jit_trace_count()
+    for cname in grid["clusters"]:
+        cores = parse_cluster(cname)
+        for sched in grid["schedulers"]:
+            for netmodel in grid["netmodels"]:
+                for gi, grp in enumerate(groups):
+                    runner = BucketedGridRunner(
+                        [encoded[n] for n in grp.names], sched,
+                        len(cores), cores, netmodel=netmodel,
+                        shape=grp.shape, batch=grp.batch,
+                        est_cache=est_caches[gi])
+                    t0 = time.perf_counter()
+                    ms, xfer = runner(points)    # compile + run [B, N]
+                    cold_s = time.perf_counter() - t0
+                    if (cname == grid["clusters"][0]
+                            and netmodel == grid["netmodels"][0]):
+                        runners[(cname, sched, netmodel, gi)] = (runner,
+                                                                 cold_s)
+                    for b, gname in enumerate(grp.names):
+                        rows.extend(estee_rows(gname, cname, netmodel,
+                                               sched, points, ms[b],
+                                               xfer[b]))
+    stats = dict(
+        compiles=jit_trace_count() - trace0,
+        bucket_groups=(len(grid["clusters"]) * len(grid["schedulers"])
+                       * len(grid["netmodels"]) * len(groups)),
+        buckets=[f"{grp.label}:{','.join(grp.names)}" for grp in groups],
+    )
+    agree_rows = (agreement_pass(grid, points, encoded, groups, runners,
+                                 stats)
+                  if agreement else [])
     write_csv("survey", rows, out_dir=out_dir, fieldnames=list(SCHEMA))
-    write_csv("survey_agreement", agree_rows, out_dir=out_dir)
-    return rows, agree_rows
+    write_csv("survey_agreement", agree_rows, out_dir=out_dir,
+              fieldnames=list(AGREE_SCHEMA))
+    return rows, agree_rows, stats
 
 
-def report(rows, agree_rows):
+def report(rows, agree_rows, stats):
     """Print the benchmark-driver ``name,us_per_call,derived`` rows."""
     for a in agree_rows:
+        if a["graph_name"] == "__pergraph_path__":
+            print(f"survey/bucket_vs_pergraph_cold,"
+                  f"{a['bucket_cold_s'] * 1e6:.0f},{a['speedup']:.2f}")
+            continue
         print(f"survey/agree_{a['graph_name']}/{a['scheduler_name']},"
               f"{a['ref_us_per_sim']:.0f},{a['makespan_ratio']:.4f}")
         print(f"survey/speedup_{a['graph_name']}/{a['scheduler_name']},"
               f"{a['vec_us_per_sim']:.0f},{a['speedup']:.1f}")
-    if agree_rows:
+    plain = [a for a in agree_rows if a["graph_name"] != "__pergraph_path__"]
+    if plain:
         print(f"survey/speedup_geomean,0,"
-              f"{geomean([a['speedup'] for a in agree_rows]):.2f}")
+              f"{geomean([a['speedup'] for a in plain]):.2f}")
+    print(f"survey/jit_compiles,0,{stats['compiles']}")
+    print(f"survey/bucket_groups,0,{stats['bucket_groups']}")
     print(f"survey/rows,0,{len(rows)}")
+
+
+def check_compiles(stats):
+    """The one-compilation-per-bucket-group contract (ISSUE 3 acceptance;
+    asserted by CI so a per-graph recompile regression fails the build)."""
+    if stats["compiles"] != stats["bucket_groups"]:
+        raise AssertionError(
+            f"jit compile count {stats['compiles']} != bucket-group count "
+            f"{stats['bucket_groups']} — the bucketed survey is "
+            f"recompiling per graph (buckets: {stats['buckets']})")
 
 
 def run(fast=True):
     """Entry point for ``benchmarks.run`` (--only survey)."""
-    rows, agree_rows = survey(MINI_GRID if fast else FULL_GRID)
-    report(rows, agree_rows)
+    rows, agree_rows, stats = survey(MINI_GRID if fast else FULL_GRID)
+    report(rows, agree_rows, stats)
     return rows
 
 
@@ -165,14 +270,26 @@ def main():
                     help=f"output directory (default {OUT_DIR!r})")
     ap.add_argument("--no-agreement", action="store_true",
                     help="skip the reference-loop agreement/speedup pass")
+    ap.add_argument("--assert-compiles", action="store_true",
+                    help="fail unless the jit compile count equals the "
+                         "bucket-group count (CI regression gate)")
     args = ap.parse_args()
     grid = FULL_GRID if args.full else MINI_GRID
     t0 = time.time()
-    rows, agree_rows = survey(grid, out_dir=args.out,
-                              agreement=not args.no_agreement)
-    report(rows, agree_rows)
-    print(f"# survey: {len(rows)} grid points in {time.time() - t0:.1f}s "
+    rows, agree_rows, stats = survey(grid, out_dir=args.out,
+                                     agreement=not args.no_agreement)
+    report(rows, agree_rows, stats)
+    print(f"# survey: {len(rows)} grid points, {stats['compiles']} jit "
+          f"compiles for {stats['bucket_groups']} bucket groups "
+          f"({'; '.join(stats['buckets'])}) in {time.time() - t0:.1f}s "
           f"-> {os.path.join(args.out, 'survey.csv')}")
+    if args.assert_compiles:
+        try:
+            check_compiles(stats)
+        except AssertionError as e:
+            print(f"error: {e}", file=sys.stderr)
+            sys.exit(1)
+        print("# compile-count assertion passed")
 
 
 if __name__ == "__main__":

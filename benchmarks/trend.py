@@ -1,0 +1,126 @@
+"""Cross-PR trend view over ``bench-smoke-results`` artifacts
+(ROADMAP "Scale / speed"; first step of the trend-view item).
+
+Every PR's bench-smoke CI job uploads ``results/`` (``survey.csv``,
+``survey_agreement.csv``, ``bench/*.csv``) as the ``bench-smoke-results``
+artifact.  Download a few of them (e.g. ``gh run download -n
+bench-smoke-results -D artifacts/pr42``), point this tool at the
+directories, and it concatenates the agreement/speedup frames into one
+trend CSV plus a compact markdown table — one row per source, so the
+perf trajectory (speedup geomean, agreement drift, compile counts,
+bucket-vs-pergraph amortisation) is readable across PRs::
+
+    PYTHONPATH=src python -m benchmarks.trend artifacts/* --out results
+
+writes ``results/trend.csv`` (all survey_agreement rows, ``source``
+column prepended) and ``results/trend.md``.  Columns absent from older
+artifacts (pre-bucketing ones have no ``compile_count``) are tolerated.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+
+from .common import geomean
+
+TREND_COLUMNS = ("source", "survey_rows", "agree_rows", "speedup_geomean",
+                 "max_ratio_dev", "compiles", "bucket_vs_pergraph")
+
+
+def _read_csv(path):
+    if not os.path.exists(path):
+        return []
+    with open(path, newline="") as f:
+        return list(csv.DictReader(f))
+
+
+def _fnum(row, key, default=None):
+    try:
+        return float(row[key])
+    except (KeyError, TypeError, ValueError):
+        return default
+
+
+def collect(source_dirs):
+    """Read each artifact directory; returns ``(rows, summaries)`` —
+    ``rows`` are the concatenated survey_agreement rows tagged with a
+    ``source`` column, ``summaries`` one aggregate dict per source."""
+    rows, summaries = [], []
+    for d in source_dirs:
+        source = os.path.basename(os.path.normpath(d))
+        agree = _read_csv(os.path.join(d, "survey_agreement.csv"))
+        survey = _read_csv(os.path.join(d, "survey.csv"))
+        for r in agree:
+            rows.append({"source": source, **r})
+        plain = [r for r in agree
+                 if r.get("graph_name") != "__pergraph_path__"]
+        speedups = [s for r in plain
+                    if (s := _fnum(r, "speedup")) is not None]
+        ratios = [s for r in plain
+                  if (s := _fnum(r, "makespan_ratio")) is not None]
+        pergraph = [r for r in agree
+                    if r.get("graph_name") == "__pergraph_path__"]
+        # sweep-wide compile count vs bucket-group count lives on the
+        # sentinel row (absent from pre-bucketing artifacts)
+        compiles = ""
+        if pergraph:
+            total = _fnum(pergraph[0], "total_compiles")
+            expect = _fnum(pergraph[0], "bucket_groups")
+            if total is not None and expect is not None:
+                compiles = f"{int(total)}/{int(expect)}"
+        summaries.append({
+            "source": source,
+            "survey_rows": len(survey),
+            "agree_rows": len(plain),
+            "speedup_geomean": (round(geomean(speedups), 3)
+                                if speedups else ""),
+            "max_ratio_dev": (round(max(abs(r - 1.0) for r in ratios), 4)
+                              if ratios else ""),
+            "compiles": compiles,
+            "bucket_vs_pergraph": (round(_fnum(pergraph[0], "speedup", 0.0),
+                                         2) if pergraph else ""),
+        })
+    return rows, summaries
+
+
+def write_trend(rows, summaries, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    csv_path = os.path.join(out_dir, "trend.csv")
+    fieldnames = ["source"]
+    for r in rows:
+        for k in r:
+            if k not in fieldnames:
+                fieldnames.append(k)
+    with open(csv_path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fieldnames, restval="")
+        w.writeheader()
+        w.writerows(rows)
+    md_path = os.path.join(out_dir, "trend.md")
+    with open(md_path, "w") as f:
+        f.write("| " + " | ".join(TREND_COLUMNS) + " |\n")
+        f.write("|" + "---|" * len(TREND_COLUMNS) + "\n")
+        for s in summaries:
+            f.write("| " + " | ".join(str(s[c]) for c in TREND_COLUMNS)
+                    + " |\n")
+    return csv_path, md_path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("sources", nargs="+",
+                    help="downloaded bench-smoke-results artifact dirs, "
+                         "one per PR/run (label = directory basename)")
+    ap.add_argument("--out", default="results",
+                    help="output directory (default 'results')")
+    args = ap.parse_args()
+    rows, summaries = collect(args.sources)
+    csv_path, md_path = write_trend(rows, summaries, args.out)
+    with open(md_path) as f:
+        print(f.read(), end="")
+    print(f"# trend: {len(rows)} agreement rows from "
+          f"{len(summaries)} artifact(s) -> {csv_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,8 @@ from .netmodels import (SimpleNetModel, MaxMinFlowNetModel, make_netmodel,
                         maxmin_fairness, Flow, NETMODELS)
 from .imodes import make_imode, IMODES
 from .worker import Worker, Assignment
-from .simulator import Simulator, Report, run_single_simulation
+from .simulator import (Simulator, Report, run_single_simulation,
+                        resolve_workers, parse_cluster)
 from .schedulers import SCHEDULERS, make_scheduler
 
 __all__ = [
@@ -12,5 +13,5 @@ __all__ = [
     "SimpleNetModel", "MaxMinFlowNetModel", "make_netmodel",
     "maxmin_fairness", "Flow", "NETMODELS", "make_imode", "IMODES",
     "Worker", "Assignment", "Simulator", "Report", "run_single_simulation",
-    "SCHEDULERS", "make_scheduler",
+    "resolve_workers", "parse_cluster", "SCHEDULERS", "make_scheduler",
 ]

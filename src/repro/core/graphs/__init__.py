@@ -44,18 +44,30 @@ def survey_names(per_family: int = 1):
     return out
 
 
-def encode_graph_batch(names, seed: int = 0):
+def encode_graph_batch(names, seed: int = 0, bucket: bool = False,
+                       t_edges=None):
     """Batch-encoding helper for grid sweeps: build each named graph and
     its dense ``GraphSpec`` exactly once, returning ``{name: (graph,
     spec)}`` — survey runners fan many (scheduler x cluster x netmodel)
-    runners out of one encoding (DESIGN.md §5)."""
-    from ..vectorized import encode_graph
+    runners out of one encoding (DESIGN.md §5).
+
+    With ``bucket=True`` the encoded specs are additionally grouped into
+    padded shape buckets (``vectorized.specs.pad_specs``; ``t_edges``
+    overrides the task-count bucket edges) and the return value becomes
+    ``(encoded, groups)`` with ``groups`` a ``[BucketGroup, ...]`` —
+    one jit compilation per group serves every member graph."""
+    from ..vectorized import encode_graph, pad_specs
+    from ..vectorized.specs import T_EDGES
 
     out = {}
     for name in names:
         g = make_graph(name, seed=seed)
         out[name] = (g, encode_graph(g))
-    return out
+    if not bucket:
+        return out
+    groups = pad_specs({n: spec for n, (_, spec) in out.items()},
+                       t_edges=T_EDGES if t_edges is None else t_edges)
+    return out, groups
 
 
 def random_graph(seed: int, n_tasks: int = 20, edge_p: float = 0.25,

@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from .netmodels import Flow, make_netmodel, NetModelBase
 from .imodes import make_imode, ImodeBase
 from .worker import Worker, Assignment
@@ -36,9 +38,25 @@ def resolve_workers(workers):
     reference simulator, the benchmark harness and the vectorized parity
     tests so every path names a cluster the same way."""
     workers = list(workers)
-    if workers and isinstance(workers[0], int):
-        return [Worker(i, c) for i, c in enumerate(workers)]
+    if workers and isinstance(workers[0], (int, np.integer)):
+        return [Worker(i, int(c)) for i, c in enumerate(workers)]
     return workers
+
+
+def parse_cluster(name: str):
+    """Cluster-name grammar shared by the survey grid and the parity
+    suites: ``"<n>x<c>"`` is n workers with c cores each, and ``+`` sums
+    heterogeneous segments — ``"1x8+4x2"`` is one 8-core worker followed
+    by four 2-core workers.  Returns the per-worker core list (the
+    ``cores: i32[W]`` vector of the vectorized simulators; feed it to
+    ``resolve_workers`` for the reference one)."""
+    cores = []
+    for part in name.split("+"):
+        n, c = part.split("x")
+        cores.extend([int(c)] * int(n))
+    if not cores:
+        raise ValueError(f"empty cluster spec {name!r}")
+    return cores
 
 
 @dataclasses.dataclass

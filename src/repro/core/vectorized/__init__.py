@@ -1,21 +1,34 @@
 """Vectorized (TPU-native) ESTEE simulator."""
-from .sim import (GraphSpec, encode_graph, make_simulator, simulate_batch,
+from .specs import (GraphSpec, BucketedGraphSpec, BucketGroup, encode_graph,
+                    as_bucketed, bucket_shape, pad_spec, pad_specs, pad_to,
+                    stack_specs, t_bucket, T_EDGES)
+from .sim import (make_simulator, simulate_batch,
                   make_dynamic_simulator, simulate_dynamic_grid,
-                  DynamicGridRunner)
+                  make_bucket_simulator, make_bucket_dynamic_simulator,
+                  DynamicGridRunner, BucketedGridRunner, jit_trace_count)
 from .scheduling import (VEC_SCHEDULERS, make_vec_scheduler,
+                         make_bucket_scheduler,
                          make_static_blevel_scheduler,
                          make_static_tlevel_scheduler,
                          make_static_mcp_scheduler, make_etf_scheduler,
                          make_random_scheduler, make_greedy_placer,
-                         make_blevel_fn, make_tlevel_fn, rank_priorities)
+                         make_bucket_greedy_placer,
+                         make_blevel_fn, make_tlevel_fn,
+                         bucket_blevel, bucket_tlevel, rank_priorities)
 from .waterfill import waterfill, waterfill_simple
 
-__all__ = ["GraphSpec", "encode_graph", "make_simulator", "simulate_batch",
+__all__ = ["GraphSpec", "BucketedGraphSpec", "BucketGroup", "encode_graph",
+           "as_bucketed", "bucket_shape", "pad_spec", "pad_specs", "pad_to",
+           "stack_specs", "t_bucket", "T_EDGES",
+           "make_simulator", "simulate_batch",
            "make_dynamic_simulator", "simulate_dynamic_grid",
-           "DynamicGridRunner",
-           "VEC_SCHEDULERS", "make_vec_scheduler",
+           "make_bucket_simulator", "make_bucket_dynamic_simulator",
+           "DynamicGridRunner", "BucketedGridRunner", "jit_trace_count",
+           "VEC_SCHEDULERS", "make_vec_scheduler", "make_bucket_scheduler",
            "make_static_blevel_scheduler", "make_static_tlevel_scheduler",
            "make_static_mcp_scheduler", "make_etf_scheduler",
            "make_random_scheduler", "make_greedy_placer",
-           "make_blevel_fn", "make_tlevel_fn", "rank_priorities",
+           "make_bucket_greedy_placer",
+           "make_blevel_fn", "make_tlevel_fn",
+           "bucket_blevel", "bucket_tlevel", "rank_priorities",
            "waterfill", "waterfill_simple"]

@@ -28,6 +28,21 @@ under one ``jax.vmap``.  ``VEC_SCHEDULERS`` maps each name to its kind:
     to the worker with minimal (estimated transfer cost, queued load,
     id) (mirrors ``greedy``; no work stealing).
 
+Every scheduler exists in two bindings sharing one implementation:
+
+* the ``make_bucket_*`` factories close over the *cluster* only
+  (``cores: i32[W]``, zero-core entries = padded/absent workers) and
+  take the graph as a runtime ``BucketedGraphSpec`` argument — so one
+  jit trace serves every graph in a shape bucket, and the batch axis of
+  a stacked bucket vmaps straight through;
+* the legacy ``make_vec_scheduler``/``make_static_*`` factories bind a
+  single unpadded ``GraphSpec`` at build time (the per-graph path).
+
+Mask semantics: invalid edges never contribute to levels, readiness
+counts, data-ready times or transfer costs; invalid tasks are committed
+as no-ops (zero duration, one core, the value written back to a
+worker's earliest slot equals the value read, so real placements are
+untouched) and their assignments are discarded by the simulator.
 Indistinguishable decisions are broken by the smallest index instead of
 the RNG the stochastic reference schedulers use — both sides of the
 parity tests (``tests/test_vectorized_dynamic.py``) share that rule.
@@ -37,6 +52,8 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from .specs import as_bucketed, as_jax
 
 # name -> kind; membership == "has a vectorized in-loop implementation"
 VEC_SCHEDULERS = {
@@ -48,89 +65,108 @@ VEC_SCHEDULERS = {
     "greedy": "dynamic",
 }
 
+NEG = jnp.float32(-3e38)
 
-def make_blevel_fn(spec):
+
+def _resolve_cores(n_workers, cores):
+    """Per-worker core vector: broadcast a scalar, pass vectors through.
+    Zero-core entries are inert padding (no task fits, no slot opens)."""
+    return np.broadcast_to(np.asarray(cores, np.int32), (n_workers,)).copy()
+
+
+def bucket_blevel(bspec, est_dur):
     """b-level from *estimated* durations (imode view at t=0); task ids
     are a topological order by construction (``TaskGraph.new_task``), so
-    one reverse sweep suffices."""
-    T = spec.T
-    e_task = jnp.asarray(spec.edge_task)
-    e_obj = jnp.asarray(spec.edge_obj)
-    producer = jnp.asarray(spec.producer)
+    one reverse sweep suffices.  Invalid edges are masked out, so padded
+    tasks keep b-level 0 and real levels match the unpadded graph."""
+    bspec = as_jax(bspec)
+    T = bspec.T
+    e_task, e_obj = bspec.edge_task, bspec.edge_obj
+    producer, edge_valid = bspec.producer, bspec.edge_valid
 
-    def blevel(est_dur):
-        def body(i, bl):
-            t = T - 1 - i
-            child = jnp.max(jnp.where(producer[e_obj] == t, bl[e_task], 0.0),
-                            initial=0.0)
-            return bl.at[t].set(est_dur[t] + child)
+    def body(i, bl):
+        t = T - 1 - i
+        child = jnp.max(jnp.where((producer[e_obj] == t) & edge_valid,
+                                  bl[e_task], 0.0), initial=0.0)
+        return bl.at[t].set(est_dur[t] + child)
 
-        return jax.lax.fori_loop(0, T, body, jnp.zeros(T, jnp.float32))
+    return jax.lax.fori_loop(0, T, body, jnp.zeros(T, jnp.float32))
 
-    return blevel
+
+def bucket_tlevel(bspec, est_dur):
+    """t-level (earliest possible start ignoring comm costs) from
+    estimated durations; forward sweep over the id-topological order."""
+    bspec = as_jax(bspec)
+    T = bspec.T
+    e_task, e_obj = bspec.edge_task, bspec.edge_obj
+    producer, edge_valid = bspec.producer, bspec.edge_valid
+
+    def body(t, tl):
+        par = producer[e_obj]
+        reach = jnp.max(jnp.where((e_task == t) & edge_valid,
+                                  tl[par] + est_dur[par], 0.0), initial=0.0)
+        return tl.at[t].set(reach)
+
+    return jax.lax.fori_loop(0, T, body, jnp.zeros(T, jnp.float32))
+
+
+def make_blevel_fn(spec):
+    """Legacy binding: close over one graph, return ``blevel(est_dur)``."""
+    b = as_bucketed(spec)
+    return lambda est_dur: bucket_blevel(b, est_dur)
 
 
 def make_tlevel_fn(spec):
-    """t-level (earliest possible start ignoring comm costs) from
-    estimated durations; forward sweep over the id-topological order."""
-    T = spec.T
-    e_task = jnp.asarray(spec.edge_task)
-    e_obj = jnp.asarray(spec.edge_obj)
-    producer = jnp.asarray(spec.producer)
-
-    def tlevel(est_dur):
-        def body(t, tl):
-            par = producer[e_obj]
-            reach = jnp.max(jnp.where(e_task == t, tl[par] + est_dur[par],
-                                      0.0), initial=0.0)
-            return tl.at[t].set(reach)
-
-        return jax.lax.fori_loop(0, T, body, jnp.zeros(T, jnp.float32))
-
-    return tlevel
+    """Legacy binding: close over one graph, return ``tlevel(est_dur)``."""
+    b = as_bucketed(spec)
+    return lambda est_dur: bucket_tlevel(b, est_dur)
 
 
 def rank_priorities(bl):
     """priority = T - rank in decreasing-b-level order (ties: smaller id).
     Globally distinct, so downstream worker/download tie-breaks never
-    depend on float equality."""
+    depend on float equality.  Padded tasks (b-level 0, largest ids)
+    rank last, so real priorities keep their relative order."""
     T = bl.shape[0]
     order = jnp.argsort(-bl, stable=True)
     return (jnp.zeros(T, jnp.float32)
             .at[order].set(jnp.float32(T) - jnp.arange(T, dtype=jnp.float32)))
 
 
-def _make_static_list_scheduler(spec, n_workers, cores, order_fn):
+def _make_bucket_list_scheduler(n_workers, cores, order_fn):
     """Shared static list-scheduling machinery: commit tasks in the order
-    ``order_fn(est_dur) -> i32[T]`` (rank -> task id), each to the
+    ``order_fn(bspec, est_dur) -> i32[T]`` (rank -> task id), each to the
     earliest-start worker.
 
-    Returns ``schedule(est_durations, est_sizes, bandwidth, seed) ->
-    (assignment i32[T], priority f32[T])`` — pure JAX, vmap-able over the
-    estimate arrays (imodes), bandwidth and seed (ignored here; the
-    uniform signature keeps every static scheduler batchable the same
-    way).
+    Returns ``schedule(bspec, est_durations, est_sizes, bandwidth, seed)
+    -> (assignment i32[T], priority f32[T])`` — pure JAX, vmap-able over
+    the spec batch axis, the estimate arrays (imodes), bandwidth and seed
+    (ignored here; the uniform signature keeps every static scheduler
+    batchable the same way).
 
     Worker selection is the earliest-start estimate over per-core free
     times with uncontended transfer costs, committed task by task — the
     same timeline model as ``schedulers.base.EarliestStartPlacer``.
+    Padded tasks commit with zero duration into a worker's earliest slot
+    (a no-op on the timeline); padded edges never feed data-ready times.
     """
-    T, W = spec.T, n_workers
-    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
-    C = int(cores.max())
-    e_task = jnp.asarray(spec.edge_task)
-    e_obj = jnp.asarray(spec.edge_obj)
-    producer = jnp.asarray(spec.producer)
-    cpus = jnp.asarray(spec.cpus)
+    W = n_workers
+    cores = _resolve_cores(n_workers, cores)
+    C = max(int(cores.max()), 1)
     cores_j = jnp.asarray(cores)
     w_ids = jnp.arange(W)
 
-    def schedule(est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0)):
         del seed
+        bspec = as_jax(bspec)
+        T = bspec.T
+        e_task, e_obj = bspec.edge_task, bspec.edge_obj
+        producer, edge_valid = bspec.producer, bspec.edge_valid
+        cpus = bspec.cpus
         est_dur = jnp.asarray(est_dur, jnp.float32)
         est_size = jnp.asarray(est_size, jnp.float32)
         bandwidth = jnp.asarray(bandwidth, jnp.float32)
-        order = order_fn(est_dur)                   # rank -> task id
+        order = order_fn(bspec, est_dur)            # rank -> task id
         # per-worker core free times, sorted ascending; slots past a
         # worker's core count are pinned at +inf
         slots0 = jnp.where(jnp.arange(C)[None, :] < cores_j[:, None],
@@ -144,8 +180,9 @@ def _make_static_list_scheduler(spec, n_workers, cores, order_fn):
             pf = fin[producer[e_obj]]
             ready_ew = pf[:, None] + jnp.where(
                 pw[:, None] == w_ids[None, :], 0.0, xfer[:, None])
-            data_ready = jnp.max(jnp.where((e_task == t)[:, None], ready_ew,
-                                           0.0), axis=0, initial=0.0)
+            mine = (e_task == t) & edge_valid
+            data_ready = jnp.max(jnp.where(mine[:, None], ready_ew, 0.0),
+                                 axis=0, initial=0.0)
             core_ready = slots[:, cpus[t] - 1]      # cpus-th smallest
             est = jnp.maximum(core_ready, data_ready)
             est = jnp.where(cores_j >= cpus[t], est, jnp.inf)
@@ -159,90 +196,87 @@ def _make_static_list_scheduler(spec, n_workers, cores, order_fn):
 
         _, aw, _, prio = jax.lax.fori_loop(
             0, T, body, (slots0, jnp.zeros(T, jnp.int32),
-                         jnp.zeros(T, jnp.float32), jnp.zeros(T, jnp.float32)))
+                         jnp.zeros(T, jnp.float32),
+                         jnp.zeros(T, jnp.float32)))
         return aw, prio
 
     return schedule
 
 
-def make_static_blevel_scheduler(spec, n_workers, cores):
+def make_bucket_blevel_scheduler(n_workers, cores):
     """blevel/HLFET: decreasing estimated b-level (ties: smaller id).
     Decreasing b-level is topological for positive durations, so no
     repair pass is needed (mirrors ``DetBlevelScheduler``)."""
-    blevel = make_blevel_fn(spec)
+    def order_fn(bspec, est_dur):
+        return jnp.argsort(-bucket_blevel(bspec, est_dur), stable=True)
 
-    def order_fn(est_dur):
-        return jnp.argsort(-blevel(est_dur), stable=True)
-
-    return _make_static_list_scheduler(spec, n_workers, cores, order_fn)
+    return _make_bucket_list_scheduler(n_workers, cores, order_fn)
 
 
-def make_static_tlevel_scheduler(spec, n_workers, cores):
+def make_bucket_tlevel_scheduler(n_workers, cores):
     """tlevel/SCFET: ascending estimated t-level (ties: smaller id);
     topological for positive durations (mirrors ``DetTlevelScheduler``)."""
-    tlevel = make_tlevel_fn(spec)
+    def order_fn(bspec, est_dur):
+        return jnp.argsort(bucket_tlevel(bspec, est_dur), stable=True)
 
-    def order_fn(est_dur):
-        return jnp.argsort(tlevel(est_dur), stable=True)
-
-    return _make_static_list_scheduler(spec, n_workers, cores, order_fn)
+    return _make_bucket_list_scheduler(n_workers, cores, order_fn)
 
 
-def make_static_mcp_scheduler(spec, n_workers, cores):
+def make_bucket_mcp_scheduler(n_workers, cores):
     """Simplified MCP: ascending ALAP = CP - blevel (ties: smaller id) —
     the same simplification as the reference ``MCPScheduler`` (mirrors
     ``DetMCPScheduler``)."""
-    blevel = make_blevel_fn(spec)
-
-    def order_fn(est_dur):
-        bl = blevel(est_dur)
+    def order_fn(bspec, est_dur):
+        bl = bucket_blevel(bspec, est_dur)
         return jnp.argsort(jnp.max(bl) - bl, stable=True)
 
-    return _make_static_list_scheduler(spec, n_workers, cores, order_fn)
+    return _make_bucket_list_scheduler(n_workers, cores, order_fn)
 
 
-def make_etf_scheduler(spec, n_workers, cores):
+def make_bucket_etf_scheduler(n_workers, cores):
     """ETF/DLS-style earliest-finish placer: at every step pick, over all
     frontier tasks (parents already committed) and eligible workers, the
     pair with the lexicographically smallest (estimated start, -b-level,
     task id, worker id) and commit it (mirrors ``DetETFScheduler``).
 
-    Same ``schedule(est_dur, est_size, bandwidth, seed)`` signature as
-    the list schedulers; T committing steps, each scanning the dense
-    [T, W] estimate matrix.
+    Same ``schedule(bspec, est_dur, est_size, bandwidth, seed)``
+    signature as the list schedulers; T committing steps, each scanning
+    the dense [T, W] estimate matrix.  Padded tasks are permanent
+    zero-cost frontier members; committing one writes a worker's
+    earliest slot back unchanged, so real pair choices are unaffected.
     """
-    T, W = spec.T, n_workers
-    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
-    C = int(cores.max())
-    e_task = jnp.asarray(spec.edge_task)
-    e_obj = jnp.asarray(spec.edge_obj)
-    producer = jnp.asarray(spec.producer)
-    n_inputs = jnp.asarray(spec.n_inputs)
-    cpus = jnp.asarray(spec.cpus)
+    W = n_workers
+    cores = _resolve_cores(n_workers, cores)
+    C = max(int(cores.max()), 1)
     cores_j = jnp.asarray(cores)
-    blevel = make_blevel_fn(spec)
-    NEG = jnp.float32(-3e38)
 
-    def schedule(est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0)):
         del seed
+        bspec = as_jax(bspec)
+        T = bspec.T
+        e_task, e_obj = bspec.edge_task, bspec.edge_obj
+        producer, edge_valid = bspec.producer, bspec.edge_valid
+        n_inputs, cpus = bspec.n_inputs, bspec.cpus
         est_dur = jnp.asarray(est_dur, jnp.float32)
         est_size = jnp.asarray(est_size, jnp.float32)
         bandwidth = jnp.asarray(bandwidth, jnp.float32)
-        bl = blevel(est_dur)
+        bl = bucket_blevel(bspec, est_dur)
         slots0 = jnp.where(jnp.arange(C)[None, :] < cores_j[:, None],
                            0.0, jnp.inf).astype(jnp.float32)
         xfer = est_size[e_obj] / bandwidth          # f32[E]
         eligible_tw = cores_j[None, :] >= cpus[:, None]       # [T, W]
+        evf = edge_valid.astype(jnp.int32)
 
         def body(r, st):
             slots, aw, fin, done, prio = st
             par = producer[e_obj]
             cnt = (jnp.zeros(T, jnp.int32)
-                   .at[e_task].add(done[par].astype(jnp.int32)))
+                   .at[e_task].add(done[par].astype(jnp.int32) * evf))
             frontier = ~done & (cnt >= n_inputs)
             pw, pf = aw[par], fin[par]
             ready_ew = pf[:, None] + jnp.where(
                 pw[:, None] == jnp.arange(W)[None, :], 0.0, xfer[:, None])
+            ready_ew = jnp.where(edge_valid[:, None], ready_ew, 0.0)
             data_ready = (jnp.zeros((T, W), jnp.float32)
                           .at[e_task].max(ready_ew))
             core_ready = slots[:, cpus - 1].T       # [T, W]
@@ -264,9 +298,9 @@ def make_etf_scheduler(spec, n_workers, cores):
                     prio.at[t].set(jnp.float32(T) - r.astype(jnp.float32)))
 
         _, aw, _, _, prio = jax.lax.fori_loop(
-            0, T, body, (slots0, jnp.zeros(T, jnp.int32),
-                         jnp.zeros(T, jnp.float32), jnp.zeros(T, bool),
-                         jnp.zeros(T, jnp.float32)))
+            0, T, body,
+            (slots0, jnp.zeros(T, jnp.int32), jnp.zeros(T, jnp.float32),
+             jnp.zeros(T, bool), jnp.zeros(T, jnp.float32)))
         return aw, prio
 
     return schedule
@@ -283,19 +317,19 @@ def _mix32(x):
     return x
 
 
-def make_random_scheduler(spec, n_workers, cores):
+def make_bucket_random_scheduler(n_workers, cores):
     """Counter-based random static scheduler: task t goes to the
     ``hash(seed, t) mod n_eligible``-th eligible worker (id order) —
     stateless, so a whole seed batch vmaps (mirrors ``random-det``).
-    Priorities are the usual decreasing-estimated-b-level ranks."""
-    T, W = spec.T, n_workers
-    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
-    cpus = jnp.asarray(spec.cpus)
+    Priorities are the usual decreasing-estimated-b-level ranks.  Real
+    tasks keep their ids under padding, so placements are pad-invariant."""
+    cores = _resolve_cores(n_workers, cores)
     cores_j = jnp.asarray(cores)
-    blevel = make_blevel_fn(spec)
 
-    def schedule(est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0)):
         del est_size, bandwidth
+        bspec = as_jax(bspec)
+        T, cpus = bspec.T, bspec.cpus
         est_dur = jnp.asarray(est_dur, jnp.float32)
         seed_u = jnp.asarray(seed).astype(jnp.uint32)
         elig = cores_j[None, :] >= cpus[:, None]              # [T, W]
@@ -306,67 +340,105 @@ def make_random_scheduler(spec, n_workers, cores):
         cum = jnp.cumsum(elig.astype(jnp.int32), axis=1)      # [T, W]
         pick = elig & (cum == (k + 1)[:, None])
         aw = jnp.argmax(pick, axis=1).astype(jnp.int32)
-        return aw, rank_priorities(blevel(est_dur))
+        return aw, rank_priorities(bucket_blevel(bspec, est_dur))
 
     return schedule
 
 
-_STATIC_FACTORIES = {
-    "blevel": make_static_blevel_scheduler,
-    "tlevel": make_static_tlevel_scheduler,
-    "mcp": make_static_mcp_scheduler,
-    "etf": make_etf_scheduler,
-    "random": make_random_scheduler,
+_BUCKET_FACTORIES = {
+    "blevel": make_bucket_blevel_scheduler,
+    "tlevel": make_bucket_tlevel_scheduler,
+    "mcp": make_bucket_mcp_scheduler,
+    "etf": make_bucket_etf_scheduler,
+    "random": make_bucket_random_scheduler,
 }
 
 
-def make_vec_scheduler(spec, n_workers, cores, name):
-    """Factory for the *static* vectorized schedulers: returns
-    ``schedule(est_durations, est_sizes, bandwidth, seed) ->
-    (assignment i32[T], priority f32[T])``, directly consumable by
-    ``make_simulator`` and used internally by ``make_dynamic_simulator``.
-    Raises for dynamic entries (``greedy`` has no one-shot schedule)."""
-    if name not in _STATIC_FACTORIES:
+def make_bucket_scheduler(n_workers, cores, name):
+    """Factory for the *static* bucket schedulers: returns
+    ``schedule(bspec, est_durations, est_sizes, bandwidth, seed) ->
+    (assignment i32[T], priority f32[T])`` with the graph late-bound, so
+    one trace serves a whole shape bucket.  Raises for dynamic entries
+    (``greedy`` has no one-shot schedule)."""
+    if name not in _BUCKET_FACTORIES:
         raise KeyError(
             f"no static vectorized scheduler {name!r} "
-            f"(have {sorted(_STATIC_FACTORIES)}; "
+            f"(have {sorted(_BUCKET_FACTORIES)}; "
             f"dynamic: {sorted(k for k, v in VEC_SCHEDULERS.items() if v == 'dynamic')})")
-    return _STATIC_FACTORIES[name](spec, n_workers, cores)
+    return _BUCKET_FACTORIES[name](n_workers, cores)
+
+
+def make_vec_scheduler(spec, n_workers, cores, name):
+    """Legacy per-graph factory: bind ``spec`` now, return
+    ``schedule(est_durations, est_sizes, bandwidth, seed) ->
+    (assignment i32[T], priority f32[T])``, directly consumable by
+    ``make_simulator`` and used internally by ``make_dynamic_simulator``."""
+    b = as_bucketed(spec)
+    fn = make_bucket_scheduler(n_workers, cores, name)
+    return lambda est_dur, est_size, bandwidth, seed=jnp.int32(0): \
+        fn(b, est_dur, est_size, bandwidth, seed)
+
+
+def _bind(bucket_factory):
+    def make(spec, n_workers, cores):
+        b = as_bucketed(spec)
+        fn = bucket_factory(n_workers, cores)
+        return lambda est_dur, est_size, bandwidth, seed=jnp.int32(0): \
+            fn(b, est_dur, est_size, bandwidth, seed)
+    return make
+
+
+make_static_blevel_scheduler = _bind(make_bucket_blevel_scheduler)
+make_static_tlevel_scheduler = _bind(make_bucket_tlevel_scheduler)
+make_static_mcp_scheduler = _bind(make_bucket_mcp_scheduler)
+make_etf_scheduler = _bind(make_bucket_etf_scheduler)
+make_random_scheduler = _bind(make_bucket_random_scheduler)
+
+
+def bucket_transfer_costs(bspec, size_now, missing_ow):
+    """``costs(size_now, missing_ow) -> f32[T, W]``: estimated bytes to
+    move so task t could run on worker w (``SimView.transfer_cost`` as
+    one segment-sum).  ``missing_ow``: bool[O, W], object neither present
+    at nor downloading to the worker.  Invalid edges contribute nothing
+    (their index-0 link targets alias real objects)."""
+    bspec = as_jax(bspec)
+    T = bspec.T
+    e_task, e_obj, edge_valid = bspec.edge_task, bspec.edge_obj, \
+        bspec.edge_valid
+    contrib = jnp.where(edge_valid[:, None],
+                        size_now[e_obj][:, None] * missing_ow[e_obj],
+                        0.0)                                        # [E, W]
+    W = missing_ow.shape[-1]
+    return jnp.zeros((T, W), jnp.float32).at[e_task].add(contrib)
 
 
 def make_transfer_costs(spec, n_workers):
-    """Returns ``costs(size_now, missing_ow) -> f32[T, W]``: estimated
-    bytes to move so task t could run on worker w (``SimView
-    .transfer_cost`` as one segment-sum).  ``missing_ow``: bool[O, W],
-    object neither present at nor downloading to the worker."""
-    T, W = spec.T, n_workers
-    e_task = jnp.asarray(spec.edge_task)
-    e_obj = jnp.asarray(spec.edge_obj)
-
-    def costs(size_now, missing_ow):
-        contrib = size_now[e_obj][:, None] * missing_ow[e_obj]      # [E, W]
-        return jnp.zeros((T, W), jnp.float32).at[e_task].add(contrib)
-
-    return costs
+    """Legacy binding of ``bucket_transfer_costs`` for one graph."""
+    del n_workers
+    b = as_bucketed(spec)
+    return lambda size_now, missing_ow: \
+        bucket_transfer_costs(b, size_now, missing_ow)
 
 
-def make_greedy_placer(spec, n_workers, cores):
-    """Returns ``place(ready_unassigned, cost_tw, load0) -> i32[T]``
-    (proposed worker per task, -1 where none).
+def make_bucket_greedy_placer(n_workers, cores):
+    """Returns ``place(bspec, ready_unassigned, cost_tw, load0) ->
+    i32[T]`` (proposed worker per task, -1 where none).
 
     Tasks are processed in id order (the order ready events are collected
     in the reference simulator); each goes to the worker minimising
     (transfer cost, queued load, worker id), and placing a task bumps the
     load its successors see — the same sequential rule as
-    ``GreedyWorkerScheduler.schedule``.
+    ``GreedyWorkerScheduler.schedule``.  Padded tasks are never ready, so
+    they place nothing and bump no loads.
     """
-    T, W = spec.T, n_workers
-    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,))
-    cpus = jnp.asarray(spec.cpus)
+    cores = _resolve_cores(n_workers, cores)
     cores_j = jnp.asarray(cores)
     BIG = jnp.int32(np.iinfo(np.int32).max)
 
-    def place(ready_unassigned, cost_tw, load0):
+    def place(bspec, ready_unassigned, cost_tw, load0):
+        bspec = as_jax(bspec)
+        cpus = bspec.cpus
+
         def body(t, st):
             pw, load = st
             active = ready_unassigned[t]
@@ -380,7 +452,15 @@ def make_greedy_placer(spec, n_workers, cores):
             return pw, load
 
         pw, _ = jax.lax.fori_loop(
-            0, T, body, (jnp.full(T, -1, jnp.int32), load0))
+            0, bspec.T, body, (jnp.full(bspec.T, -1, jnp.int32), load0))
         return pw
 
     return place
+
+
+def make_greedy_placer(spec, n_workers, cores):
+    """Legacy binding of ``make_bucket_greedy_placer`` for one graph."""
+    b = as_bucketed(spec)
+    fn = make_bucket_greedy_placer(n_workers, cores)
+    return lambda ready_unassigned, cost_tw, load0: \
+        fn(b, ready_unassigned, cost_tw, load0)

@@ -3,18 +3,35 @@
 Executes task graphs on a simulated cluster under the max-min or simple
 network model, entirely inside ``jax.lax.while_loop`` over dense arrays —
 so whole batches of simulations (GA populations, bandwidth/msd/imode
-sweeps, seeds) run in parallel under ``jax.vmap`` / ``pjit``.
+sweeps, seeds, and — via shape buckets — whole *graph sets*) run in
+parallel under ``jax.vmap`` / ``pjit``.
 
-Two entry points (scoping in DESIGN.md §3):
+Two semantics, each in two bindings (scoping in DESIGN.md §3):
 
-* ``make_simulator`` — a *static* schedule (``task -> worker`` +
-  priorities) supplied by the caller, msd=0, decision_delay=0;
-* ``make_dynamic_simulator`` — the paper's dynamic-scheduling machinery:
-  MSD-gated scheduler invocations with event batching, a
-  ``decision_delay`` before assignments reach the workers, and
-  imode-filtered estimates (dense arrays from ``imodes.encode_imode``,
-  switching to true values for finished elements), with an in-loop
-  vectorized scheduler (``vectorized.scheduling``).
+* ``make_bucket_simulator`` / ``make_simulator`` — a *static* schedule
+  (``task -> worker`` + priorities) supplied by the caller, msd=0,
+  decision_delay=0;
+* ``make_bucket_dynamic_simulator`` / ``make_dynamic_simulator`` — the
+  paper's dynamic-scheduling machinery: MSD-gated scheduler invocations
+  with event batching, a ``decision_delay`` before assignments reach the
+  workers, and imode-filtered estimates (dense arrays from
+  ``imodes.encode_imode``, switching to true values for finished
+  elements), with an in-loop vectorized scheduler
+  (``vectorized.scheduling``).
+
+The ``make_bucket_*`` forms take the graph as a runtime
+``BucketedGraphSpec`` argument (``vectorized.specs``): one jit trace
+serves every graph padded into the same shape bucket, and a stacked
+bucket batch rides a single ``vmap`` axis (``BucketedGridRunner``).
+The legacy forms bind one unpadded ``GraphSpec`` at build time.
+
+Mask semantics (padding is inert): invalid tasks are born
+started+finished with ``t_finish`` excluded from the makespan; invalid
+edges never satisfy inputs, never carry flows, never claim a
+(object, destination) dedup key and never contribute download priority;
+invalid objects have zero size.  The cluster is a per-worker
+``cores: i32[W]`` vector — heterogeneous shapes (``1x8+4x2``) and
+zero-core padded workers ride the same code path as homogeneous ones.
 
 Shared semantics mirror the reference simulator (``core.simulator``):
 
@@ -32,16 +49,16 @@ in DESIGN.md §3.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .specs import (GraphSpec, encode_graph, as_bucketed, as_jax,
+                    bucket_shape, pad_spec, pad_to, stack_specs)
 from .waterfill import waterfill
-from .scheduling import (make_blevel_fn, make_greedy_placer,
-                         make_transfer_costs, make_vec_scheduler,
-                         rank_priorities, VEC_SCHEDULERS)
+from .scheduling import (bucket_blevel, bucket_transfer_costs,
+                         make_bucket_greedy_placer, make_bucket_scheduler,
+                         rank_priorities, VEC_SCHEDULERS, _resolve_cores)
 
 READY_BOOST = 1_000_000.0
 TIME_EPS = 1e-6
@@ -49,122 +66,87 @@ BYTES_EPS = 1e-3
 NEG = jnp.float32(-3e38)
 NEG_TIME = jnp.float32(-1e30)
 
-
-@dataclasses.dataclass(frozen=True)
-class GraphSpec:
-    """Static structure of a task graph as dense arrays."""
-    durations: np.ndarray      # f32[T]
-    cpus: np.ndarray           # i32[T]
-    sizes: np.ndarray          # f32[O]
-    producer: np.ndarray       # i32[O]
-    edge_task: np.ndarray      # i32[E]  consumer task of each input edge
-    edge_obj: np.ndarray       # i32[E]
-    n_inputs: np.ndarray       # i32[T]
-
-    @property
-    def T(self):
-        return len(self.durations)
-
-    @property
-    def O(self):
-        return len(self.sizes)
-
-    @property
-    def E(self):
-        return len(self.edge_task)
+# jit-trace odometer: every trace of a simulator ``run`` body bumps it
+# (tracing happens exactly once per XLA compilation; eager calls are
+# filtered out via ``trace_state_clean``), so callers can assert
+# compile counts — the survey runner's one-compile-per-bucket
+# regression gate reads deltas of ``jit_trace_count()``.
+_TRACE_COUNT = [0]
 
 
-def encode_graph(graph) -> GraphSpec:
-    T = graph.task_count
-    durations = np.array([t.duration for t in graph.tasks], np.float32)
-    cpus = np.array([t.cpus for t in graph.tasks], np.int32)
-    sizes = np.array([o.size for o in graph.objects], np.float32)
-    producer = np.array([o.parent.id for o in graph.objects], np.int32)
-    et, eo = [], []
-    for t in graph.tasks:
-        for o in t.inputs:
-            et.append(t.id)
-            eo.append(o.id)
-    edge_task = np.array(et, np.int32) if et else np.zeros(0, np.int32)
-    edge_obj = np.array(eo, np.int32) if eo else np.zeros(0, np.int32)
-    n_inputs = np.zeros(T, np.int32)
-    for t in graph.tasks:
-        n_inputs[t.id] = len(t.inputs)
-    return GraphSpec(durations, cpus, sizes, producer, edge_task, edge_obj,
-                     n_inputs)
+def _count_trace():
+    # trace_state_clean left jax.core after the 0.4 line; if the probe
+    # is unavailable, count every call (the pre-guard behavior: correct
+    # under jit, over-counts only eager/bare-vmap use)
+    probe = getattr(jax.core, "trace_state_clean", None)
+    if probe is None or not probe():
+        _TRACE_COUNT[0] += 1
 
 
-def _pick_per_bucket(bucket, n_buckets, eligible, *keys):
-    """Lexicographic argmax per bucket.  ``keys`` are f32 arrays (higher
-    wins); final tie broken by smallest element index.  Returns bool[F]
-    with at most one True per bucket."""
-    cand = eligible
-    for k in keys:
-        kk = jnp.where(cand, k, NEG)
-        m = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(kk)
-        cand = cand & (kk == m[bucket]) & (m[bucket] > NEG)
-    idx = jnp.arange(bucket.shape[0], dtype=jnp.float32)
-    ii = jnp.where(cand, -idx, NEG)
-    m = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(ii)
-    return cand & (ii == m[bucket])
+def jit_trace_count() -> int:
+    """Total simulator jit traces (== compilations) so far in-process."""
+    return _TRACE_COUNT[0]
 
 
-def make_simulator(spec: GraphSpec, n_workers: int, cores,
-                   netmodel: str = "maxmin", flow_rounds: int = 4,
-                   max_steps: int = None):
-    """Returns ``run(assignment, priority, durations, sizes, bandwidth)
-    -> (makespan, transferred_bytes, ok)`` — a pure JAX function.
+def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
+                          flow_rounds: int = 4, max_steps: int = None):
+    """Returns ``run(bspec, assignment, priority, durations, sizes,
+    bandwidth) -> (makespan, transferred_bytes, ok)`` — a pure JAX
+    function with the graph late-bound as a ``BucketedGraphSpec``.
 
-    ``assignment``: i32[T] worker per task; ``priority``: f32[T]
-    (blocking == priority, the default used by every bundled scheduler).
-    ``durations``/``sizes`` override the spec's (pass spec values normally)
-    so sweeps/imodes/GA can batch them; ``bandwidth`` is a f32 scalar.
-    ``ok`` is False (and makespan NaN) when the ``max_steps`` event budget
-    ran out before every task finished — e.g. an assignment whose tasks
-    can never start; ``simulate_batch`` turns that into an error.
+    ``assignment``: i32[T] worker per task (every entry must be a valid
+    worker index, padded entries included — their value is ignored);
+    ``priority``: f32[T] (blocking == priority, the default used by
+    every bundled scheduler).  ``durations``/``sizes`` override the
+    spec's (pass None normally) so sweeps/imodes/GA can batch them;
+    ``bandwidth`` is a f32 scalar.  ``ok`` is False (and makespan NaN)
+    when the ``max_steps`` event budget ran out before every valid task
+    finished — e.g. an assignment whose tasks can never start;
+    ``simulate_batch`` turns that into an error.
     """
-    T, O, E, W = spec.T, spec.O, spec.E, n_workers
-    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,)).copy()
-    max_cores = int(cores.max())
-    if max_steps is None:
-        max_steps = 4 * (T + E) + 64
+    W = n_workers
+    cores = _resolve_cores(n_workers, cores)
+    max_cores = max(int(cores.max()), 1)
+    cores_j = jnp.asarray(cores)
     simple = netmodel == "simple"
 
-    e_task = jnp.asarray(spec.edge_task)
-    e_obj = jnp.asarray(spec.edge_obj)
-    producer = jnp.asarray(spec.producer)
-    n_inputs = jnp.asarray(spec.n_inputs)
-    cpus = jnp.asarray(spec.cpus)
-    cores_j = jnp.asarray(cores)
-
-    def run(assignment, priority, durations=None, sizes=None,
+    def run(bspec, assignment, priority, durations=None, sizes=None,
             bandwidth=jnp.float32(100 * 1024 * 1024)):
-        durations = jnp.asarray(spec.durations if durations is None
+        _count_trace()
+        bspec = as_jax(bspec)
+        T, O, E = bspec.T, bspec.O, bspec.E
+        steps_cap = max_steps if max_steps is not None else 4 * (T + E) + 64
+        e_task, e_obj = bspec.edge_task, bspec.edge_obj
+        producer, n_inputs, cpus = bspec.producer, bspec.n_inputs, bspec.cpus
+        task_valid, edge_valid = bspec.task_valid, bspec.edge_valid
+        durations = jnp.asarray(bspec.durations if durations is None
                                 else durations, jnp.float32)
-        sizes = jnp.asarray(spec.sizes if sizes is None else sizes,
+        sizes = jnp.asarray(bspec.sizes if sizes is None else sizes,
                             jnp.float32)
         bandwidth = jnp.asarray(bandwidth, jnp.float32)
-        assignment = jnp.asarray(assignment, jnp.int32)
+        assignment = jnp.clip(jnp.asarray(assignment, jnp.int32), 0, W - 1)
         priority = jnp.asarray(priority, jnp.float32)
 
         obj_worker = assignment[producer]          # where each obj is born
         f_dst = assignment[e_task]                 # flow = edge
         f_src = obj_worker[e_obj]
-        cross = f_src != f_dst
-        # dedup: one flow per (obj, dst); rep = smallest edge idx in bucket
+        cross = (f_src != f_dst) & edge_valid
+        # dedup: one flow per (obj, dst); rep = smallest valid edge idx
+        # in bucket (invalid edges alias key (0, dst) — masked out here)
         key = e_obj * W + f_dst
         big = jnp.full(O * W, E, jnp.int32)
-        rep_per_key = big.at[key].min(jnp.arange(E, dtype=jnp.int32))
+        e_ids = jnp.arange(E, dtype=jnp.int32)
+        rep_per_key = big.at[key].min(jnp.where(edge_valid, e_ids, E))
         rep = rep_per_key[key]                     # i32[E]
-        is_rep = rep == jnp.arange(E, dtype=jnp.int32)
+        is_rep = (rep == e_ids) & edge_valid
         needed = cross & is_rep
-        f_bytes = sizes[e_obj]
+        f_bytes = jnp.where(edge_valid, sizes[e_obj], 0.0)
         pair = f_src * W + f_dst
 
         state0 = dict(
             now=jnp.float32(0.0),
-            t_started=jnp.zeros(T, bool),
-            t_done=jnp.zeros(T, bool),
+            t_started=~task_valid,
+            t_done=~task_valid,
             t_finish=jnp.full(T, jnp.inf, jnp.float32),
             free=cores_j.astype(jnp.int32),
             f_started=jnp.zeros(E, bool),
@@ -176,13 +158,14 @@ def make_simulator(spec: GraphSpec, n_workers: int, cores,
         def edge_satisfied(st):
             """input edge e is satisfied at the consumer's worker."""
             prod_done = st["t_done"][producer[e_obj]]
-            local = prod_done & ~cross
+            local = prod_done & ~cross & edge_valid
             moved = st["f_done"][rep] & cross
             return local | moved
 
         def task_inputs_produced(st):
-            prod_done = st["t_done"][producer[e_obj]].astype(jnp.int32)
-            cnt = jnp.zeros(T, jnp.int32).at[e_task].add(prod_done)
+            prod_done = st["t_done"][producer[e_obj]] & edge_valid
+            cnt = jnp.zeros(T, jnp.int32).at[e_task].add(
+                prod_done.astype(jnp.int32))
             return cnt >= n_inputs
 
         def start_flows(st):
@@ -190,6 +173,7 @@ def make_simulator(spec: GraphSpec, n_workers: int, cores,
             ready_boost = task_inputs_produced(st)[e_task].astype(jnp.float32)
             # download priority = max over same (obj,dst) edges
             raw = priority[e_task] + READY_BOOST * ready_boost
+            raw = jnp.where(edge_valid, raw, NEG)
             mx = jnp.full(O * W, NEG, jnp.float32).at[key].max(raw)
             f_prio = mx[key]
             if simple:
@@ -267,16 +251,49 @@ def make_simulator(spec: GraphSpec, n_workers: int, cores,
                         steps=st["steps"] + 1)
 
         def cond(st):
-            return (~jnp.all(st["t_done"])) & (st["steps"] < max_steps)
+            return (~jnp.all(st["t_done"])) & (st["steps"] < steps_cap)
 
         st = jax.lax.while_loop(cond, body, state0)
-        makespan = jnp.max(jnp.where(st["t_done"], st["t_finish"], jnp.inf))
+        makespan = jnp.max(jnp.where(st["t_done"] & task_valid,
+                                     st["t_finish"], 0.0))
         transferred = jnp.sum(jnp.where(needed & st["f_done"], f_bytes, 0.0))
         ok = jnp.all(st["t_done"])
         makespan = jnp.where(ok, makespan, jnp.nan)
         return makespan, transferred, ok
 
     return run
+
+
+def make_simulator(spec: GraphSpec, n_workers: int, cores,
+                   netmodel: str = "maxmin", flow_rounds: int = 4,
+                   max_steps: int = None):
+    """Legacy per-graph binding of ``make_bucket_simulator``: returns
+    ``run(assignment, priority, durations, sizes, bandwidth) ->
+    (makespan, transferred_bytes, ok)`` with ``spec`` baked in."""
+    bspec = as_bucketed(spec)
+    brun = make_bucket_simulator(n_workers, cores, netmodel, flow_rounds,
+                                 max_steps)
+
+    def run(assignment, priority, durations=None, sizes=None,
+            bandwidth=jnp.float32(100 * 1024 * 1024)):
+        return brun(bspec, assignment, priority, durations, sizes, bandwidth)
+
+    return run
+
+
+def _pick_per_bucket(bucket, n_buckets, eligible, *keys):
+    """Lexicographic argmax per bucket.  ``keys`` are f32 arrays (higher
+    wins); final tie broken by smallest element index.  Returns bool[F]
+    with at most one True per bucket."""
+    cand = eligible
+    for k in keys:
+        kk = jnp.where(cand, k, NEG)
+        m = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(kk)
+        cand = cand & (kk == m[bucket]) & (m[bucket] > NEG)
+    idx = jnp.arange(bucket.shape[0], dtype=jnp.float32)
+    ii = jnp.where(cand, -idx, NEG)
+    m = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(ii)
+    return cand & (ii == m[bucket])
 
 
 def _check_ok(ok, context: str):
@@ -290,6 +307,17 @@ def _check_ok(ok, context: str):
             f"would be NaN) — the schedule likely leaves tasks unable to "
             f"start; raise max_steps only if the graph is genuinely that "
             f"deep")
+
+
+def _check_cpus_fit(specs, cores, context: str):
+    """Host-side guard shared by the runners: every task must fit the
+    largest worker (the reference scheduler base raises the same way)."""
+    max_cores = int(np.max(cores)) if np.size(cores) else 0
+    for spec in specs:
+        if spec.cpus.size and int(spec.cpus.max()) > max_cores:
+            raise ValueError(
+                f"{context}: a task needs {int(spec.cpus.max())} cores but "
+                f"the largest worker has {max_cores}")
 
 
 def simulate_batch(graph, assignments, priorities, n_workers, cores,
@@ -309,12 +337,13 @@ def simulate_batch(graph, assignments, priorities, n_workers, cores,
 # dynamic scheduling: MSD + decision delay + imodes (paper §2, F4/F5)
 # ======================================================================
 
-def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
-                           scheduler: str = "blevel",
-                           netmodel: str = "maxmin", flow_rounds: int = 4,
-                           max_steps: int = None):
-    """Returns ``run(est_durations, est_sizes, msd, decision_delay,
-    bandwidth) -> (makespan, transferred_bytes, ok)`` — a pure JAX
+def make_bucket_dynamic_simulator(n_workers: int, cores,
+                                  scheduler: str = "blevel",
+                                  netmodel: str = "maxmin",
+                                  flow_rounds: int = 4,
+                                  max_steps: int = None):
+    """Returns ``run(bspec, est_durations, est_sizes, msd, decision_delay,
+    bandwidth, seed) -> (makespan, transferred_bytes, ok)`` — a pure JAX
     function mirroring the reference simulator's event loop
     (``Simulator._step``) including its dynamic-scheduling machinery:
 
@@ -324,9 +353,9 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
     * assignments take effect ``decision_delay`` seconds after the
       invocation that produced them;
     * the scheduler sees ``est_durations`` f32[T] / ``est_sizes`` f32[O]
-      (from ``imodes.encode_imode``) for unfinished elements and true
-      values for finished ones; the simulation itself always runs on
-      ground truth.
+      (from ``imodes.encode_imode``, padded with zeros to the bucket
+      shape) for unfinished elements and true values for finished ones;
+      the simulation itself always runs on ground truth.
 
     ``scheduler`` is one of ``vectorized.scheduling.VEC_SCHEDULERS``:
     the *static* family (``blevel``, ``tlevel``, ``mcp``, ``etf``,
@@ -337,11 +366,13 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
     ``mcp-det``, ``etf-det``, ``random-det``, ``greedy`` —
     ``schedulers/det.py``).
 
-    ``run`` also accepts a trailing ``seed`` (i32, default 0) consumed
-    by the counter-based ``random`` scheduler and ignored by the rest.
-    All six arguments are batchable under ``jax.vmap``, so a whole
-    (msd x decision_delay x imode x bandwidth x seed) grid is one
-    device call.
+    The graph is late-bound: the same trace serves every
+    ``BucketedGraphSpec`` of one shape, and a stacked bucket batch plus
+    the (msd x decision_delay x imode x bandwidth x seed) grid vmap into
+    a single device call (``BucketedGridRunner``).  Padded entries are
+    inert (mask semantics in the module docstring); padded/zero-core
+    workers never receive tasks.
+
     Flows stay per input edge like the static path, but their
     destination — and the (object, destination) deduplication — is only
     known once the scheduler has assigned the consumer, so the dedup
@@ -352,61 +383,62 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
     if scheduler not in VEC_SCHEDULERS:
         raise KeyError(f"unknown vectorized scheduler {scheduler!r} "
                        f"(have {sorted(VEC_SCHEDULERS)})")
-    T, O, E, W = spec.T, spec.O, spec.E, n_workers
-    F = O * W
-    cores = np.broadcast_to(np.asarray(cores, np.int32), (W,)).copy()
-    max_cores = int(cores.max())
-    if spec.cpus.size and int(spec.cpus.max()) > max_cores:
-        raise ValueError(
-            f"a task needs {int(spec.cpus.max())} cores but the largest "
-            f"worker has {max_cores}")
-    if max_steps is None:
-        max_steps = 10 * (T + E) + 8 * W + 1024
+    W = n_workers
+    cores = _resolve_cores(n_workers, cores)
+    max_cores = max(int(cores.max()), 1)
+    cores_j = jnp.asarray(cores)
     simple = netmodel == "simple"
     dynamic_sched = VEC_SCHEDULERS[scheduler] == "dynamic"
 
-    e_task = jnp.asarray(spec.edge_task)
-    e_obj = jnp.asarray(spec.edge_obj)
-    producer = jnp.asarray(spec.producer)
-    n_inputs = jnp.asarray(spec.n_inputs)
-    cpus = jnp.asarray(spec.cpus)
-    cores_j = jnp.asarray(cores)
-    durations_true = jnp.asarray(spec.durations)
-    sizes_true = jnp.asarray(spec.sizes)
-    e_ids = jnp.arange(E, dtype=jnp.int32)
-    e_bytes = sizes_true[e_obj]
-
-    blevel = make_blevel_fn(spec)
     if dynamic_sched:
         static_schedule = None
-        greedy_place = make_greedy_placer(spec, W, cores)
+        greedy_place = make_bucket_greedy_placer(W, cores)
     else:
-        static_schedule = make_vec_scheduler(spec, W, cores, scheduler)
+        static_schedule = make_bucket_scheduler(W, cores, scheduler)
         greedy_place = None
-    transfer_costs = make_transfer_costs(spec, W)
 
-    def run(est_durations, est_sizes, msd=jnp.float32(0.0),
+    def run(bspec, est_durations, est_sizes, msd=jnp.float32(0.0),
             decision_delay=jnp.float32(0.0),
             bandwidth=jnp.float32(100 * 1024 * 1024), seed=jnp.int32(0)):
-        est_dur = jnp.asarray(est_durations, jnp.float32)
-        est_size = jnp.asarray(est_sizes, jnp.float32)
+        _count_trace()
+        bspec = as_jax(bspec)
+        T, O, E = bspec.T, bspec.O, bspec.E
+        F = O * W
+        steps_cap = (max_steps if max_steps is not None
+                     else 10 * (T + E) + 8 * W + 1024)
+        e_task, e_obj = bspec.edge_task, bspec.edge_obj
+        producer, n_inputs, cpus = bspec.producer, bspec.n_inputs, bspec.cpus
+        task_valid, obj_valid, edge_valid = (bspec.task_valid,
+                                             bspec.obj_valid,
+                                             bspec.edge_valid)
+        durations_true = jnp.asarray(bspec.durations, jnp.float32)
+        sizes_true = jnp.asarray(bspec.sizes, jnp.float32)
+        e_ids = jnp.arange(E, dtype=jnp.int32)
+        e_bytes = jnp.where(edge_valid, sizes_true[e_obj], 0.0)
+        # estimates are defensively masked: padded entries always 0, so
+        # levels/costs of real tasks cannot depend on filler values
+        est_dur = jnp.where(task_valid,
+                            jnp.asarray(est_durations, jnp.float32), 0.0)
+        est_size = jnp.where(obj_valid,
+                             jnp.asarray(est_sizes, jnp.float32), 0.0)
         msd_ = jnp.asarray(msd, jnp.float32)
         delay = jnp.asarray(decision_delay, jnp.float32)
         bandwidth_ = jnp.asarray(bandwidth, jnp.float32)
         seed_ = jnp.asarray(seed, jnp.int32)
 
         if dynamic_sched:
-            greedy_prio = rank_priorities(blevel(est_dur))
+            greedy_prio = rank_priorities(bucket_blevel(bspec, est_dur))
             p_worker0 = jnp.full(T, -1, jnp.int32)
             p_prio0 = jnp.zeros(T, jnp.float32)
             p_time0 = jnp.full(T, jnp.inf, jnp.float32)
         else:
             # static schedule == the single invocation at t=0, computed
             # from pure estimates; it reaches workers after the delay
-            aw0, prio0 = static_schedule(est_dur, est_size, bandwidth_,
-                                         seed_)
-            p_worker0, p_prio0 = aw0, prio0
-            p_time0 = jnp.full(T, 1.0, jnp.float32) * delay
+            aw0, prio0 = static_schedule(bspec, est_dur, est_size,
+                                         bandwidth_, seed_)
+            p_worker0 = jnp.where(task_valid, aw0, -1)
+            p_prio0 = prio0
+            p_time0 = jnp.where(task_valid, delay, jnp.inf)
 
         state0 = dict(
             now=jnp.float32(0.0),
@@ -415,8 +447,8 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
             aw=jnp.full(T, -1, jnp.int32),       # applied worker per task
             ap=jnp.zeros(T, jnp.float32),        # applied priority
             pw=p_worker0, pp=p_prio0, pt=p_time0,
-            t_started=jnp.zeros(T, bool),
-            t_done=jnp.zeros(T, bool),
+            t_started=~task_valid,
+            t_done=~task_valid,
             t_finish=jnp.full(T, jnp.inf, jnp.float32),
             free=cores_j.astype(jnp.int32),
             f_started=jnp.zeros(E, bool),        # flow = input edge
@@ -429,8 +461,9 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
         def edge_views(st):
             """(consumer worker, producer worker, (obj, dst) dedup key)
             per input edge; keys are only meaningful for assigned
-            consumers — everything scattered through them is masked so
-            the clip-to-0 of unassigned edges never pollutes."""
+            consumers of *valid* edges — everything scattered through
+            them is masked so the clip-to-0 of unassigned or padded
+            edges never pollutes."""
             aw_e = st["aw"][e_task]
             src_e = st["aw"][producer[e_obj]]
             key_e = e_obj * W + jnp.clip(aw_e, 0)
@@ -443,8 +476,9 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
             return st["t_done"][producer]                       # bool[O]
 
         def inputs_produced(st):
+            prod_e = produced_of(st)[e_obj] & edge_valid
             cnt = (jnp.zeros(T, jnp.int32)
-                   .at[e_task].add(produced_of(st)[e_obj].astype(jnp.int32)))
+                   .at[e_task].add(prod_e.astype(jnp.int32)))
             return cnt >= n_inputs                              # bool[T]
 
         # --------------------------------------------------- scheduler
@@ -473,7 +507,7 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
                     & prod[:, None]
                 missing = ~(local_ow | done_ow | dl_ow)
                 size_now = jnp.where(prod, sizes_true, est_size)
-                cost_tw = transfer_costs(size_now, missing)
+                cost_tw = bucket_transfer_costs(bspec, size_now, missing)
             ready_un = (inputs_produced(st) & (st["aw"] < 0)
                         & (st["pw"] < 0) & ~st["t_done"])
             queued = (((st["aw"] >= 0) | (st["pw"] >= 0))
@@ -481,7 +515,7 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
             qworker = jnp.where(st["aw"] >= 0, st["aw"], st["pw"])
             load0 = (jnp.zeros(W, jnp.int32)
                      .at[jnp.clip(qworker, 0)].add(queued.astype(jnp.int32)))
-            new_pw = greedy_place(ready_un, cost_tw, load0)
+            new_pw = greedy_place(bspec, ready_un, cost_tw, load0)
             newly = due & (new_pw >= 0)
             return dict(
                 st,
@@ -498,12 +532,13 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
                 return st
             aw_e, src_e, key_e = edge_views(st)
             prod_e = st["t_done"][producer[e_obj]]
-            cross = (aw_e >= 0) & (src_e >= 0) & (src_e != aw_e)
+            cross = ((aw_e >= 0) & (src_e >= 0) & (src_e != aw_e)
+                     & edge_valid)
             # download priority: max over same-key edges, ready boosted
             ready = inputs_produced(st)
             raw = st["ap"][e_task] + READY_BOOST * \
                 ready[e_task].astype(jnp.float32)
-            raw = jnp.where(aw_e >= 0, raw, NEG)
+            raw = jnp.where((aw_e >= 0) & edge_valid, raw, NEG)
             f_prio = (jnp.full(F, NEG, jnp.float32)
                       .at[key_e].max(raw))[key_e]
             bucket = jnp.clip(aw_e, 0)
@@ -533,7 +568,7 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
             prod_done = st["t_done"][producer[e_obj]]
             local = prod_done & (src_e == aw_e)
             moved = key_reduce_or(key_e, st["f_done"])[key_e]
-            return (aw_e >= 0) & (local | moved)
+            return (aw_e >= 0) & (local | moved) & edge_valid
 
         def start_tasks(st):
             if E == 0:
@@ -612,16 +647,56 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
                         steps=st["steps"] + 1)
 
         def cond(st):
-            return (~jnp.all(st["t_done"])) & (st["steps"] < max_steps)
+            return (~jnp.all(st["t_done"])) & (st["steps"] < steps_cap)
 
         st = jax.lax.while_loop(cond, body, state0)
-        makespan = jnp.max(jnp.where(st["t_done"], st["t_finish"], jnp.inf))
+        makespan = jnp.max(jnp.where(st["t_done"] & task_valid,
+                                     st["t_finish"], 0.0))
         transferred = jnp.sum(jnp.where(st["f_done"], e_bytes, 0.0))
         ok = jnp.all(st["t_done"])
         makespan = jnp.where(ok, makespan, jnp.nan)
         return makespan, transferred, ok
 
     return run
+
+
+def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
+                           scheduler: str = "blevel",
+                           netmodel: str = "maxmin", flow_rounds: int = 4,
+                           max_steps: int = None):
+    """Legacy per-graph binding of ``make_bucket_dynamic_simulator``:
+    returns ``run(est_durations, est_sizes, msd, decision_delay,
+    bandwidth, seed) -> (makespan, transferred_bytes, ok)`` with ``spec``
+    baked in.  All six arguments are batchable under ``jax.vmap``, so a
+    whole (msd x decision_delay x imode x bandwidth x seed) grid is one
+    device call."""
+    cores_v = _resolve_cores(n_workers, cores)
+    _check_cpus_fit([spec], cores_v, "make_dynamic_simulator")
+    bspec = as_bucketed(spec)
+    brun = make_bucket_dynamic_simulator(n_workers, cores_v, scheduler,
+                                         netmodel, flow_rounds, max_steps)
+
+    def run(est_durations, est_sizes, msd=jnp.float32(0.0),
+            decision_delay=jnp.float32(0.0),
+            bandwidth=jnp.float32(100 * 1024 * 1024), seed=jnp.int32(0)):
+        return brun(bspec, est_durations, est_sizes, msd, decision_delay,
+                    bandwidth, seed)
+
+    return run
+
+
+def _points_arrays(points):
+    points = list(points)
+    if not points:
+        raise ValueError("dynamic grid needs at least one point "
+                         "(got an empty points iterable)")
+    M = np.array([p.get("msd", 0.0) for p in points], np.float32)
+    DD = np.array([p.get("decision_delay", 0.0) for p in points],
+                  np.float32)
+    BW = np.array([p.get("bandwidth", 100 * 1024 * 1024.0)
+                   for p in points], np.float32)
+    SD = np.array([p.get("seed", 0) for p in points], np.int32)
+    return points, M, DD, BW, SD
 
 
 class DynamicGridRunner:
@@ -633,7 +708,9 @@ class DynamicGridRunner:
     sweeps (benchmark loops, GA generations, dashboards) pay tracing and
     XLA compilation exactly once per batch shape.  Pass a prebuilt
     ``spec`` (``encode_graph(graph)``) to share the dense encoding when
-    many runners sweep the same graph (the survey runner does).
+    many runners sweep the same graph.  ``cores`` may be a scalar or a
+    per-worker list (heterogeneous cluster).  For whole graph *sets*
+    sharing one compilation, see ``BucketedGridRunner``.
     """
 
     def __init__(self, graph, scheduler, n_workers, cores,
@@ -660,22 +737,101 @@ class DynamicGridRunner:
         only matters for the counter-based ``random`` scheduler).
         Returns ``(makespans f32[N], transferred f32[N])`` in point
         order; raises if any grid point exhausted its event budget."""
-        points = list(points)
-        if not points:
-            raise ValueError("dynamic grid needs at least one point "
-                             "(got an empty points iterable)")
+        points, M, DD, BW, SD = _points_arrays(points)
         D = np.stack([self._estimates(p.get("imode", "exact"))[0]
                       for p in points])
         S = np.stack([self._estimates(p.get("imode", "exact"))[1]
                       for p in points])
-        M = np.array([p.get("msd", 0.0) for p in points], np.float32)
-        DD = np.array([p.get("decision_delay", 0.0) for p in points],
-                      np.float32)
-        BW = np.array([p.get("bandwidth", 100 * 1024 * 1024.0)
-                       for p in points], np.float32)
-        SD = np.array([p.get("seed", 0) for p in points], np.int32)
         ms, xfer, ok = self._fn(D, S, M, DD, BW, SD)
         _check_ok(ok, f"simulate_dynamic_grid({self.graph.name!r}, "
+                      f"{self.scheduler!r})")
+        return np.asarray(ms), np.asarray(xfer)
+
+
+class BucketedGridRunner:
+    """One jit compilation for a whole *shape bucket* of graphs on one
+    (cluster, scheduler, netmodel).
+
+    ``entries`` is ``[(graph, spec), ...]`` (or ``{name: (graph,
+    spec)}``); every member is padded to the common bucket shape
+    (``shape`` or ``specs.bucket_shape``) and stacked along a graph vmap
+    axis, so ``__call__(points)`` executes the full [graphs x points]
+    grid — estimates, msd, delay, bandwidth, seed — in a single device
+    call compiled exactly once (the survey's one-compile-per-bucket
+    contract; measured by ``jit_trace_count``).  ``cores`` is a scalar
+    or per-worker list (heterogeneous cluster, e.g. ``1x8+4x2``).
+
+    When many runners sweep the same bucket (the survey's cluster x
+    scheduler x netmodel fan-out), pass the prestacked ``batch``
+    (``BucketGroup.batch``) and a shared ``est_cache`` dict so the
+    padding/stacking and per-imode estimate encodings are computed once
+    per bucket instead of once per runner.
+    """
+
+    def __init__(self, entries, scheduler, n_workers, cores,
+                 netmodel="maxmin", max_steps=None, shape=None,
+                 batch=None, est_cache=None):
+        if isinstance(entries, dict):
+            entries = list(entries.values())
+        entries = [(g, encode_graph(g) if s is None else s)
+                   for g, s in entries]
+        self.graphs = [g for g, _ in entries]
+        self.specs = [s for _, s in entries]
+        self.names = [g.name for g in self.graphs]
+        self.scheduler = scheduler
+        cores_v = _resolve_cores(n_workers, cores)
+        _check_cpus_fit(self.specs, cores_v,
+                        f"BucketedGridRunner({scheduler!r})")
+        self.shape = tuple(shape) if shape is not None \
+            else bucket_shape(self.specs)
+        if batch is not None:
+            if batch.shape != self.shape or batch.B != len(self.specs):
+                raise ValueError(
+                    f"prebuilt batch {batch.shape}xB{batch.B} does not "
+                    f"match {self.shape}xB{len(self.specs)}")
+            self.bspec = batch
+        else:
+            self.bspec = stack_specs([pad_spec(s, self.shape)
+                                      for s in self.specs])
+        self.run = make_bucket_dynamic_simulator(
+            n_workers, cores_v, scheduler, netmodel, max_steps=max_steps)
+        over_points = jax.vmap(self.run,
+                               in_axes=(None, 0, 0, 0, 0, 0, 0))
+        self._fn = jax.jit(jax.vmap(over_points,
+                                    in_axes=(0, 0, 0, None, None, None,
+                                             None)))
+        self._est = {} if est_cache is None else est_cache
+
+    @property
+    def B(self):
+        return len(self.graphs)
+
+    def _estimates(self, name):
+        """Padded, stacked estimates for one imode: (f32[B, T], f32[B, O])."""
+        if name not in self._est:
+            from ..imodes import encode_imode
+            T, O, _ = self.shape
+            ds, ss = [], []
+            for g in self.graphs:
+                d, s = encode_imode(g, name)
+                ds.append(pad_to(d, T))
+                ss.append(pad_to(s, O))
+            self._est[name] = (np.stack(ds), np.stack(ss))
+        return self._est[name]
+
+    def __call__(self, points):
+        """Same point dicts as ``DynamicGridRunner``; returns
+        ``(makespans f32[B, N], transferred f32[B, N])`` with the graph
+        axis in ``self.names`` order."""
+        points, M, DD, BW, SD = _points_arrays(points)
+        # [B, N, T] / [B, N, O]: per point the whole graph batch sees
+        # that point's imode estimates
+        D = np.stack([self._estimates(p.get("imode", "exact"))[0]
+                      for p in points], axis=1)
+        S = np.stack([self._estimates(p.get("imode", "exact"))[1]
+                      for p in points], axis=1)
+        ms, xfer, ok = self._fn(self.bspec, D, S, M, DD, BW, SD)
+        _check_ok(ok, f"BucketedGridRunner({self.names!r}, "
                       f"{self.scheduler!r})")
         return np.asarray(ms), np.asarray(xfer)
 

@@ -1,0 +1,262 @@
+"""Dense-graph data model for the vectorized simulator (DESIGN.md §3).
+
+Two layers:
+
+* ``GraphSpec`` — one task graph as dense numpy arrays
+  (``encode_graph``), exactly the shapes the graph has;
+* ``BucketedGraphSpec`` — the *padded* view: arrays grown to a shared
+  shape bucket with explicit validity masks (``task_valid`` /
+  ``obj_valid`` / ``edge_valid``), optionally stacked along a leading
+  batch axis.  Padding is semantically inert — padded tasks are born
+  finished, padded edges never carry flows, padded objects have zero
+  size — so one jit-compiled simulator program serves every graph in a
+  bucket under ``jax.vmap``.
+
+Bucketing rule (``pad_specs``): graphs are grouped by the task-count
+bucket edge (``T_EDGES``, e.g. T <= 160); within one group the object
+and edge dimensions are padded to the group maximum rounded up to a
+multiple of ``PAD_MULTIPLE``.  The bucket shape therefore depends only
+on the member sizes, so repeated sweeps over the same graph set reuse
+the same compiled programs.
+
+``BucketedGraphSpec`` is registered as a JAX pytree: its arrays can be
+traced arguments, which is what lets ``make_bucket_simulator`` /
+``make_bucket_dynamic_simulator`` (``vectorized.sim``) compile once per
+bucket instead of once per graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+
+# task-count bucket edges; beyond the last edge sizes round up to a
+# multiple of it (survey representatives land in the 160 bucket:
+# merge_triplets T=148, fastcrossv T=88, sipht T=64)
+T_EDGES = (32, 160, 512, 2048)
+PAD_MULTIPLE = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    """Static structure of a task graph as dense arrays."""
+    durations: np.ndarray      # f32[T]
+    cpus: np.ndarray           # i32[T]
+    sizes: np.ndarray          # f32[O]
+    producer: np.ndarray       # i32[O]
+    edge_task: np.ndarray      # i32[E]  consumer task of each input edge
+    edge_obj: np.ndarray       # i32[E]
+    n_inputs: np.ndarray       # i32[T]
+
+    @property
+    def T(self):
+        return len(self.durations)
+
+    @property
+    def O(self):
+        return len(self.sizes)
+
+    @property
+    def E(self):
+        return len(self.edge_task)
+
+
+def encode_graph(graph) -> GraphSpec:
+    T = graph.task_count
+    durations = np.array([t.duration for t in graph.tasks], np.float32)
+    cpus = np.array([t.cpus for t in graph.tasks], np.int32)
+    sizes = np.array([o.size for o in graph.objects], np.float32)
+    producer = np.array([o.parent.id for o in graph.objects], np.int32)
+    et, eo = [], []
+    for t in graph.tasks:
+        for o in t.inputs:
+            et.append(t.id)
+            eo.append(o.id)
+    edge_task = np.array(et, np.int32) if et else np.zeros(0, np.int32)
+    edge_obj = np.array(eo, np.int32) if eo else np.zeros(0, np.int32)
+    n_inputs = np.zeros(T, np.int32)
+    for t in graph.tasks:
+        n_inputs[t.id] = len(t.inputs)
+    return GraphSpec(durations, cpus, sizes, producer, edge_task, edge_obj,
+                     n_inputs)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketedGraphSpec:
+    """Padded (optionally batched) ``GraphSpec`` with validity masks.
+
+    All fields are array leaves of one pytree, so a batch-stacked
+    instance vmaps like any other argument.  Shapes are ``[..., T]`` /
+    ``[..., O]`` / ``[..., E]`` with an optional shared leading batch
+    axis.  Mask semantics (DESIGN.md §3): invalid tasks are born
+    started+finished and are never assigned; invalid edges never count
+    toward readiness, never carry flows and never claim a download-dedup
+    key; invalid objects have zero size.  Padding targets (``producer``
+    / ``edge_task`` / ``edge_obj`` of invalid entries) are index 0 —
+    every kernel masks them out explicitly, so the value is arbitrary.
+    """
+    durations: np.ndarray      # f32[..., T]
+    cpus: np.ndarray           # i32[..., T]
+    sizes: np.ndarray          # f32[..., O]
+    producer: np.ndarray       # i32[..., O]
+    edge_task: np.ndarray      # i32[..., E]
+    edge_obj: np.ndarray       # i32[..., E]
+    n_inputs: np.ndarray       # i32[..., T]
+    task_valid: np.ndarray     # bool[..., T]
+    obj_valid: np.ndarray      # bool[..., O]
+    edge_valid: np.ndarray     # bool[..., E]
+
+    @property
+    def T(self):
+        return self.durations.shape[-1]
+
+    @property
+    def O(self):
+        return self.sizes.shape[-1]
+
+    @property
+    def E(self):
+        return self.edge_task.shape[-1]
+
+    @property
+    def B(self):
+        """Leading batch size, or None when unbatched."""
+        return None if self.durations.ndim == 1 else self.durations.shape[0]
+
+    @property
+    def shape(self):
+        return (self.T, self.O, self.E)
+
+
+_BSPEC_FIELDS = [f.name for f in dataclasses.fields(BucketedGraphSpec)]
+
+jax.tree_util.register_pytree_node(
+    BucketedGraphSpec,
+    lambda s: (tuple(getattr(s, f) for f in _BSPEC_FIELDS), None),
+    lambda aux, children: BucketedGraphSpec(*children),
+)
+
+
+def as_jax(bspec: BucketedGraphSpec) -> BucketedGraphSpec:
+    """Leaves as jnp arrays — entry-point coercion so numpy-held specs
+    mix with traced values inside jit/vmap (a no-op on tracers)."""
+    import jax.numpy as jnp
+    return jax.tree_util.tree_map(jnp.asarray, bspec)
+
+
+def _pad1(a, n, fill):
+    if len(a) == n:
+        return np.asarray(a).copy()
+    out = np.full((n,), fill, np.asarray(a).dtype)
+    out[:len(a)] = a
+    return out
+
+
+def as_bucketed(spec) -> BucketedGraphSpec:
+    """A ``GraphSpec`` as a zero-padding ``BucketedGraphSpec`` (all-valid
+    masks) — the compatibility path for the per-graph entry points."""
+    if isinstance(spec, BucketedGraphSpec):
+        return spec
+    return pad_spec(spec, (spec.T, spec.O, spec.E))
+
+
+def pad_spec(spec: GraphSpec, shape) -> BucketedGraphSpec:
+    """Pad one ``GraphSpec`` to ``shape = (T, O, E)`` with inert filler:
+    zero durations/sizes, one-core tasks, index-0 link targets, and
+    masks marking the real prefix."""
+    T, O, E = shape
+    if T < spec.T or O < spec.O or E < spec.E:
+        raise ValueError(f"bucket shape {shape} smaller than graph shape "
+                         f"{(spec.T, spec.O, spec.E)}")
+    return BucketedGraphSpec(
+        durations=_pad1(spec.durations, T, 0.0),
+        cpus=_pad1(spec.cpus, T, 1),
+        sizes=_pad1(spec.sizes, O, 0.0),
+        producer=_pad1(spec.producer, O, 0),
+        edge_task=_pad1(spec.edge_task, E, 0),
+        edge_obj=_pad1(spec.edge_obj, E, 0),
+        n_inputs=_pad1(spec.n_inputs, T, 0),
+        task_valid=np.arange(T) < spec.T,
+        obj_valid=np.arange(O) < spec.O,
+        edge_valid=np.arange(E) < spec.E,
+    )
+
+
+def stack_specs(bspecs) -> BucketedGraphSpec:
+    """Stack same-shape ``BucketedGraphSpec``s along a new leading batch
+    axis (the graph axis of one bucketed vmap call)."""
+    bspecs = list(bspecs)
+    shapes = {b.shape for b in bspecs}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack mixed bucket shapes {sorted(shapes)}")
+    return BucketedGraphSpec(*(
+        np.stack([getattr(b, f) for b in bspecs]) for f in _BSPEC_FIELDS))
+
+
+def pad_to(a, n, fill=0.0):
+    """Pad a per-task/object vector (e.g. an ``encode_imode`` estimate)
+    to the bucket length with an inert fill."""
+    return _pad1(np.asarray(a), n, fill)
+
+
+def round_up(n: int, multiple: int = PAD_MULTIPLE) -> int:
+    return 0 if n == 0 else ((n + multiple - 1) // multiple) * multiple
+
+
+def t_bucket(T: int, t_edges=T_EDGES) -> int:
+    """Bucket edge for a task count: smallest configured edge >= T, or
+    the next multiple of the last edge beyond it."""
+    for e in t_edges:
+        if T <= e:
+            return e
+    return round_up(T, t_edges[-1])
+
+
+def bucket_shape(specs, t_edges=T_EDGES):
+    """Common padded shape for a set of specs sharing one T bucket:
+    (T bucket edge, max O rounded up, max E rounded up)."""
+    specs = list(specs)
+    edges = {t_bucket(s.T, t_edges) for s in specs}
+    if len(edges) != 1:
+        raise ValueError(f"specs span several T buckets {sorted(edges)}")
+    return (edges.pop(),
+            round_up(max(s.O for s in specs)),
+            round_up(max(s.E for s in specs)))
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketGroup:
+    """One shape bucket of the grid: member names, their unpadded specs,
+    the common padded shape and the batch-stacked padded spec."""
+    shape: tuple              # (T, O, E) padded
+    names: tuple              # member graph names, batch order
+    specs: tuple              # unpadded GraphSpecs, batch order
+    batch: BucketedGraphSpec  # stacked [B, ...] arrays + masks
+
+    @property
+    def label(self):
+        T, O, E = self.shape
+        return f"T{T}xO{O}xE{E}"
+
+
+def pad_specs(named_specs, t_edges=T_EDGES):
+    """The bucketing layer: group ``{name: GraphSpec}`` (or ``(name,
+    spec)`` pairs) by T bucket, pad every member to its group's common
+    shape and stack — returns ``[BucketGroup, ...]`` ordered by bucket
+    size.  One jit compilation serves each returned group."""
+    items = (list(named_specs.items()) if isinstance(named_specs, dict)
+             else list(named_specs))
+    by_edge = {}
+    for name, spec in items:
+        by_edge.setdefault(t_bucket(spec.T, t_edges), []).append((name, spec))
+    groups = []
+    for edge in sorted(by_edge):
+        members = by_edge[edge]
+        shape = bucket_shape([s for _, s in members], t_edges)
+        batch = stack_specs([pad_spec(s, shape) for _, s in members])
+        groups.append(BucketGroup(shape=shape,
+                                  names=tuple(n for n, _ in members),
+                                  specs=tuple(s for _, s in members),
+                                  batch=batch))
+    return groups

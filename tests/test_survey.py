@@ -28,6 +28,42 @@ def test_grid_points_expansion():
     assert len(g["netmodels"]) == 2
 
 
+def test_grids_name_parseable_clusters_incl_hetero():
+    """Cluster axes are name strings of the shared grammar; both grids
+    carry the heterogeneous ``1x8+4x2`` shape (paper §5 cluster column)."""
+    from repro.core import parse_cluster
+
+    for grid in (survey.MINI_GRID, survey.FULL_GRID):
+        for cname in grid["clusters"]:
+            cores = parse_cluster(cname)
+            assert cores and all(c > 0 for c in cores)
+        assert "1x8+4x2" in grid["clusters"]
+    assert parse_cluster("1x8+4x2") == [8, 2, 2, 2, 2]
+
+
+def test_check_compiles_contract():
+    ok = dict(compiles=20, bucket_groups=20, buckets=["T160xO160xE416:a"])
+    survey.check_compiles(ok)              # no raise
+    import pytest
+
+    with pytest.raises(AssertionError, match="recompiling per graph"):
+        survey.check_compiles(dict(compiles=23, bucket_groups=20,
+                                   buckets=["T160xO160xE416:a"]))
+
+
+def test_bucket_graph_batch_groups_survey_reps():
+    """``encode_graph_batch(bucket=True)`` returns the padded groups the
+    survey compiles once each; the mini representatives share one."""
+    names = survey_names(1)
+    encoded, groups = encode_graph_batch(names, seed=0, bucket=True)
+    assert set(encoded) == set(names)
+    assert sum(len(g.names) for g in groups) == len(names)
+    assert len(groups) == 1
+    grp = groups[0]
+    assert grp.batch.durations.shape[0] == len(names)
+    assert grp.label.startswith("T")
+
+
 def test_estee_rows_schema():
     pts = survey.grid_points(survey.MINI_GRID)
     rows = survey.estee_rows("fork1", "8x4", "maxmin", "etf", pts,

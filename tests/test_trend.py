@@ -1,0 +1,75 @@
+"""Trend tool (benchmarks/trend.py): concatenating bench-smoke-results
+artifacts across PRs into one trend CSV + markdown table."""
+import csv
+import os
+
+from benchmarks import trend
+
+
+def _write_artifact(d, speedups, ratios, with_bucket_cols):
+    os.makedirs(d)
+    with open(os.path.join(d, "survey.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=["graph_name", "time"])
+        w.writeheader()
+        for i in range(4):
+            w.writerow({"graph_name": f"g{i}", "time": 1.0})
+    rows = []
+    for i, (s, r) in enumerate(zip(speedups, ratios)):
+        row = {"graph_name": f"g{i}", "scheduler_name": "blevel",
+               "makespan_ratio": r, "speedup": s}
+        if with_bucket_cols:
+            row.update({"bucket": "T160xO160xE416", "group_size": 3,
+                        "compile_count": 1})
+        rows.append(row)
+    if with_bucket_cols:
+        rows.append({"graph_name": "__pergraph_path__",
+                     "scheduler_name": "blevel", "speedup": 2.5,
+                     "bucket": "T160xO160xE416", "compile_count": 3,
+                     "total_compiles": 16, "bucket_groups": 16})
+    with open(os.path.join(d, "survey_agreement.csv"), "w",
+              newline="") as f:
+        w = csv.DictWriter(f, fieldnames=sorted({k for r in rows for k in r}),
+                           restval="")
+        w.writeheader()
+        w.writerows(rows)
+
+
+def test_collect_and_write(tmp_path):
+    # one pre-bucketing artifact (no compile columns), one current
+    _write_artifact(str(tmp_path / "pr2"), [0.5, 2.0], [1.0, 1.0],
+                    with_bucket_cols=False)
+    _write_artifact(str(tmp_path / "pr3"), [1.0, 4.0], [1.0, 0.9973],
+                    with_bucket_cols=True)
+    rows, summaries = trend.collect([str(tmp_path / "pr2"),
+                                     str(tmp_path / "pr3")])
+    assert [s["source"] for s in summaries] == ["pr2", "pr3"]
+    s2, s3 = summaries
+    assert s2["survey_rows"] == 4 and s2["agree_rows"] == 2
+    assert s2["speedup_geomean"] == 1.0           # geomean(0.5, 2)
+    assert s2["compiles"] == "" and s2["bucket_vs_pergraph"] == ""
+    assert s3["speedup_geomean"] == 2.0
+    assert s3["max_ratio_dev"] == 0.0027
+    assert s3["compiles"] == "16/16" and s3["bucket_vs_pergraph"] == 2.5
+    # the per-graph sentinel row is excluded from aggregates but kept
+    # in the concatenated frame
+    assert sum(r["graph_name"] == "__pergraph_path__" for r in rows) == 1
+    assert all(r["source"] in ("pr2", "pr3") for r in rows)
+
+    csv_path, md_path = trend.write_trend(rows, summaries,
+                                          str(tmp_path / "out"))
+    with open(csv_path, newline="") as f:
+        back = list(csv.DictReader(f))
+    assert len(back) == len(rows)
+    assert back[0]["source"] == "pr2"
+    md = open(md_path).read()
+    assert "| pr2 |" in md and "| pr3 |" in md
+    assert md.splitlines()[0].startswith("| source |")
+
+
+def test_collect_tolerates_missing_files(tmp_path):
+    d = tmp_path / "empty"
+    d.mkdir()
+    rows, summaries = trend.collect([str(d)])
+    assert rows == []
+    assert summaries[0]["survey_rows"] == 0
+    assert summaries[0]["speedup_geomean"] == ""
