@@ -1,0 +1,192 @@
+"""Machine-readable perf record for the flow-slot PR (``BENCH_PR4.json``).
+
+ISSUE 4's acceptance asks the bench-smoke job to start accumulating a
+cross-PR perf trajectory.  This runner measures, on the current machine:
+
+* **flow_slots** — events/sec of the vectorized static simulator with
+  the bounded flow-slot pool vs the PR-3 per-edge path, per shape
+  bucket: the mini survey's T160 representative (``merge_triplets``)
+  and a synthetic layered workflow landing in the T2048 bucket, where
+  E >> DOWNLOAD_SLOTS * W and the compaction is an asymptotic win
+  (headline cluster ``16x4``; the paper grid's mid-size shape).  Both
+  paths must produce bit-identical makespans — checked here, enforced
+  in depth by ``tests/test_flowslots.py``.
+* **survey** — the mini paper-grid survey (``benchmarks.survey``):
+  jit compile count vs the (bucket, W, scheduler, netmodel) group
+  count, agreement rates vs the reference twins, and the
+  bucket-vs-pergraph cold-compile speedup.
+
+Output: ``BENCH_PR4.json`` at the repo root (override with ``--json``)
+plus a copy under ``--out`` (default ``results/``) so the bench-smoke
+artifact carries it.  CLI::
+
+    PYTHONPATH=src python -m benchmarks.bench_pr4 --assert-compiles
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+
+from repro.core import MiB, TaskGraph, parse_cluster
+from repro.core.graphs import make_graph
+from repro.core.imodes import encode_imode
+from repro.core.vectorized import (encode_graph, make_bucket_simulator,
+                                   make_vec_scheduler)
+from repro.core.vectorized.sim import DOWNLOAD_SLOTS
+from repro.core.vectorized.specs import pad_spec, pad_to, round_up, t_bucket
+
+from . import survey as survey_mod
+
+DEFAULT_JSON = "BENCH_PR4.json"
+
+
+def t2048_graph(layers=8, width=72, fanin=4):
+    """Synthetic layered workflow in the T2048 shape bucket: T = 576
+    tasks, E = 2016 input edges (>> DOWNLOAD_SLOTS * W), distinct
+    durations/sizes so no decision rests on a float tie."""
+    g = TaskGraph("t2048_layered")
+    prev = []
+    for layer in range(layers):
+        cur = []
+        for i in range(width):
+            k = layer * width + i
+            inputs = ([prev[(i * 3 + j * 7) % len(prev)].outputs[0]
+                       for j in range(fanin)] if prev else ())
+            cur.append(g.new_task(0.5 + 0.01 * (k % 37), inputs=inputs,
+                                  outputs=[(20 + k % 50) * MiB],
+                                  expected_duration=0.6 + 0.01 * (k % 29)))
+        prev = cur
+    return g
+
+
+BENCH_GRAPHS = (
+    # (graph factory, cluster name) — T160 survey representative plus
+    # the synthetic T2048 case
+    (lambda: make_graph("merge_triplets", seed=0), "8x4"),
+    (t2048_graph, "16x4"),
+)
+
+
+def bench_flow_slots(reps=3):
+    """Events/sec of the static max-min simulator, flow-slot pool vs the
+    per-edge baseline, on each bench graph padded to its real shape
+    bucket.  Returns ``{bucket_label: row_dict}``."""
+    out = {}
+    for make, cname in BENCH_GRAPHS:
+        g = make()
+        spec = encode_graph(g)
+        shape = (t_bucket(spec.T), round_up(spec.O), round_up(spec.E))
+        bspec = pad_spec(spec, shape)
+        label = f"T{shape[0]}xO{shape[1]}xE{shape[2]}"
+        cores = parse_cluster(cname)
+        W = len(cores)
+        bw = np.float32(100 * MiB)
+        d, s = encode_imode(g, "exact")
+        aw, prio = jax.jit(make_vec_scheduler(spec, W, cores, "blevel"))(
+            d, s, bw)
+        aw_p = pad_to(np.asarray(aw), shape[0], 0).astype(np.int32)
+        prio_p = pad_to(np.asarray(prio), shape[0], 0.0).astype(np.float32)
+        row = {"graph": g.name, "cluster": cname,
+               "edges": int(spec.E), "slots": DOWNLOAD_SLOTS * W}
+        for key, flag in (("per_edge", False), ("flow_slots", True)):
+            run = jax.jit(make_bucket_simulator(
+                W, cores, "maxmin", flow_slots=flag, return_steps=True))
+            res = run(bspec, aw_p, prio_p, None, None, bw)
+            jax.block_until_ready(res)           # compile + sanity
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                res = run(bspec, aw_p, prio_p, None, None, bw)
+                jax.block_until_ready(res)
+            wall = (time.perf_counter() - t0) / reps
+            ms, _, ok, steps = (np.asarray(x) for x in res)
+            if not bool(ok):
+                raise RuntimeError(f"bench graph {g.name} did not finish")
+            row[f"{key}_makespan"] = float(ms)
+            row[f"{key}_events"] = int(steps)
+            row[f"{key}_events_per_s"] = round(float(steps) / wall, 1)
+        if row["per_edge_makespan"] != row["flow_slots_makespan"]:
+            raise RuntimeError(
+                f"flow-slot path diverged from per-edge path on {g.name}: "
+                f"{row['flow_slots_makespan']} != {row['per_edge_makespan']}")
+        row["events_per_s_speedup"] = round(
+            row["flow_slots_events_per_s"] / row["per_edge_events_per_s"], 2)
+        out[label] = row
+    return out
+
+
+def survey_summary(agree_rows, stats):
+    plain = [a for a in agree_rows if a["graph_name"] != "__pergraph_path__"]
+    sentinel = [a for a in agree_rows
+                if a["graph_name"] == "__pergraph_path__"]
+    summary = {
+        "compiles": stats["compiles"],
+        "bucket_groups": stats["bucket_groups"],
+        "cluster_groups": stats["cluster_groups"],
+        "agreement_max_dev": (round(max(abs(a["makespan_ratio"] - 1.0)
+                                        for a in plain), 6)
+                              if plain else None),
+        "speedup_geomean": (round(survey_mod.geomean(
+            [a["speedup"] for a in plain]), 4) if plain else None),
+    }
+    if sentinel:
+        summary["bucket_vs_pergraph_cold"] = round(sentinel[0]["speedup"], 3)
+        summary["bucket_cold_s"] = sentinel[0]["bucket_cold_s"]
+        summary["pergraph_cold_s"] = sentinel[0]["pergraph_cold_s"]
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=survey_mod.OUT_DIR,
+                    help="survey output directory (default 'results')")
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help=f"perf-record path (default {DEFAULT_JSON!r})")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="warm repetitions per flow-slot measurement")
+    ap.add_argument("--skip-survey", action="store_true",
+                    help="only the flow-slot bench (fast local iteration)")
+    ap.add_argument("--assert-compiles", action="store_true",
+                    help="fail unless the survey's jit compile count "
+                         "equals its bucket-group count (CI gate)")
+    args = ap.parse_args(argv)
+    if args.assert_compiles and args.skip_survey:
+        ap.error("--assert-compiles needs the survey: drop --skip-survey")
+    record = {"generated_by": "benchmarks.bench_pr4",
+              "backend": jax.default_backend()}
+    t0 = time.time()
+    record["flow_slots"] = bench_flow_slots(reps=args.reps)
+    for label, row in record["flow_slots"].items():
+        print(f"bench_pr4/events_per_s_{label},"
+              f"{1e6 / row['flow_slots_events_per_s']:.0f},"
+              f"{row['events_per_s_speedup']}")
+    if not args.skip_survey:
+        rows, agree_rows, stats = survey_mod.survey(survey_mod.MINI_GRID,
+                                                    out_dir=args.out)
+        survey_mod.report(rows, agree_rows, stats)
+        record["survey"] = survey_summary(agree_rows, stats)
+    record["wall_s"] = round(time.time() - t0, 1)
+    os.makedirs(args.out, exist_ok=True)
+    for path in (args.json, os.path.join(args.out,
+                                         os.path.basename(args.json))):
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+    print(f"# bench_pr4: wrote {args.json} "
+          f"(+ copy under {args.out}/) in {record['wall_s']}s")
+    if args.assert_compiles and not args.skip_survey:
+        try:
+            survey_mod.check_compiles(stats)
+        except AssertionError as e:
+            print(f"error: {e}", file=sys.stderr)
+            sys.exit(1)
+        print("# compile-count assertion passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Automated cross-PR trend collection (ROADMAP "Scale / speed").
+
+``benchmarks.trend`` turns downloaded ``bench-smoke-results`` artifact
+directories into ``results/trend.csv`` / ``trend.md``; this wrapper
+automates the download step with the GitHub CLI so one command (or the
+scheduled ``trend`` workflow) refreshes the whole trajectory::
+
+    PYTHONPATH=src python -m benchmarks.collect_trend --limit 12
+
+It lists the most recent completed ``ci`` workflow runs on the main
+branch (``gh run list``), downloads each run's ``bench-smoke-results``
+artifact into ``<out>/artifacts/run-<number>-<sha7>/`` (``gh run
+download``; runs whose artifact expired or never uploaded are skipped
+with a note), and hands every directory that materialised to
+``trend.collect``/``write_trend``.  Authentication is whatever ``gh``
+already has (``GH_TOKEN`` in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from .trend import collect, write_trend
+
+ARTIFACT = "bench-smoke-results"
+
+
+def _gh(args, repo=None, capture=True):
+    cmd = ["gh"] + args + (["--repo", repo] if repo else [])
+    return subprocess.run(cmd, check=True, text=True,
+                          capture_output=capture).stdout
+
+
+def list_runs(limit, repo=None, workflow="ci", branch="main"):
+    """Most recent completed runs of ``workflow`` on ``branch``, oldest
+    first (so the trend table reads top-to-bottom in time order)."""
+    out = _gh(["run", "list", "--workflow", workflow, "--branch", branch,
+               "--status", "completed", "--limit", str(limit), "--json",
+               "databaseId,number,headSha,createdAt"], repo=repo)
+    runs = json.loads(out)
+    return sorted(runs, key=lambda r: r.get("createdAt", ""))
+
+
+def run_label(run):
+    """Stable artifact-directory basename (= trend ``source`` column)."""
+    return f"run-{run.get('number', run['databaseId'])}-" \
+           f"{run.get('headSha', '')[:7]}"
+
+
+def download_artifacts(runs, dest, repo=None, downloader=None):
+    """Download each run's bench-smoke artifact; returns the directories
+    that actually materialised (a run without the artifact — expired,
+    or from before the bench-smoke job existed — is skipped)."""
+    if downloader is None:
+        def downloader(run_id, target):
+            _gh(["run", "download", str(run_id), "-n", ARTIFACT,
+                 "-D", target], repo=repo, capture=False)
+    got = []
+    for run in runs:
+        target = os.path.join(dest, run_label(run))
+        if not os.path.isdir(target):
+            try:
+                downloader(run["databaseId"], target)
+            except (subprocess.CalledProcessError, OSError) as e:
+                # a half-written directory must not look like a cached
+                # artifact on the next invocation
+                if os.path.isdir(target):
+                    import shutil
+                    shutil.rmtree(target, ignore_errors=True)
+                print(f"# skip {run_label(run)}: no {ARTIFACT} ({e})",
+                      file=sys.stderr)
+                continue
+        if os.path.isdir(target):
+            got.append(target)
+    return got
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--repo", default=None,
+                    help="owner/name (default: the current repository)")
+    ap.add_argument("--workflow", default="ci")
+    ap.add_argument("--branch", default="main")
+    ap.add_argument("--limit", type=int, default=12,
+                    help="how many recent completed runs to fetch")
+    ap.add_argument("--out", default="results",
+                    help="output directory (trend.csv/trend.md; artifacts "
+                         "cache under <out>/artifacts)")
+    args = ap.parse_args(argv)
+    try:
+        runs = list_runs(args.limit, repo=args.repo,
+                         workflow=args.workflow, branch=args.branch)
+    except FileNotFoundError:
+        sys.exit("error: the GitHub CLI ('gh') is not installed — install "
+                 "it or download artifacts by hand and run "
+                 "benchmarks.trend directly")
+    except subprocess.CalledProcessError as e:
+        sys.exit(f"error: gh run list failed ({e}); is the repo reachable "
+                 f"and gh authenticated?")
+    sources = download_artifacts(runs, os.path.join(args.out, "artifacts"),
+                                 repo=args.repo)
+    if not sources:
+        sys.exit(f"error: none of the {len(runs)} runs had a downloadable "
+                 f"{ARTIFACT} artifact")
+    rows, summaries = collect(sources)
+    csv_path, md_path = write_trend(rows, summaries, args.out)
+    with open(md_path) as f:
+        print(f.read(), end="")
+    print(f"# trend: {len(rows)} agreement rows from {len(sources)} "
+          f"artifact(s) -> {csv_path}")
+
+
+if __name__ == "__main__":
+    main()

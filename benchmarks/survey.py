@@ -5,17 +5,20 @@ internals, MSD, imodes) shift results by up to an order of magnitude —
 is demonstrated by a survey over the full (graph family x cluster x
 bandwidth x netmodel x scheduler x imode x msd) grid.  This runner
 sweeps that grid through the batched vectorized simulator: graphs are
-padded into shape buckets (``vectorized.specs.pad_specs``) and the grid
-is grouped by (bucket, cluster signature, scheduler, netmodel) — one
+padded into shape buckets (``vectorized.specs.pad_specs``), clusters
+are padded into worker-count buckets (``w_bucket``: next power of two,
+shorter clusters gain inert zero-core workers), and the grid is grouped
+by **(bucket, padded W, scheduler, netmodel)** — one
 ``BucketedGridRunner`` jit compilation per group executes the whole
-[graphs x bandwidth x imode x msd] sub-grid as a single device call.
-The measured jit-trace count must equal the group count
-(``--assert-compiles``; CI's bench-smoke regression gate against silent
-per-graph recompiles).
+[clusters x graphs x bandwidth x imode x msd] sub-grid as a single
+device call, with the per-worker ``cores`` vector a *traced argument*
+riding its own vmap axis.  The measured jit-trace count must equal the
+group count (``--assert-compiles``; CI's bench-smoke regression gate
+against silent per-graph or per-cluster recompiles).
 
 Clusters are named by the shared grammar ``repro.core.parse_cluster``:
 homogeneous ``8x4`` or heterogeneous ``1x8+4x2`` (one 8-core worker plus
-four 2-core workers — the per-worker ``cores`` vector rides the same
+four 2-core workers — padded to W=8, it shares the ``8x4`` group's one
 compiled program).
 
 It emits an estee-schema CSV::
@@ -43,6 +46,8 @@ import argparse
 import os
 import sys
 import time
+
+import numpy as np
 
 from repro.core import MiB, parse_cluster
 from repro.core.graphs import encode_graph_batch, survey_names
@@ -98,6 +103,36 @@ def grid_points(grid):
             for m in grid["msds"]]
 
 
+def w_bucket(n_workers: int) -> int:
+    """Padded worker-count bucket: the next power of two >= n_workers.
+    Same-bucket clusters pad to one W (zero-core filler workers are
+    inert) and share one compiled program per (bucket, scheduler,
+    netmodel) — the traced-cores contract (DESIGN.md §3)."""
+    w = 1
+    while w < n_workers:
+        w *= 2
+    return w
+
+
+def cluster_groups(cluster_names):
+    """Group cluster name strings by padded worker count: returns
+    ``[(W, [name, ...], cores i32[K, W]), ...]`` ordered by W, each
+    entry one traced-cores vmap axis for the runners."""
+    by_w = {}
+    for cname in cluster_names:
+        cores = parse_cluster(cname)
+        by_w.setdefault(w_bucket(len(cores)), []).append(cname)
+    out = []
+    for wb in sorted(by_w):
+        names = by_w[wb]
+        cores2d = np.stack([
+            np.pad(np.asarray(parse_cluster(n), np.int32),
+                   (0, wb - len(parse_cluster(n))))
+            for n in names])
+        out.append((wb, names, cores2d))
+    return out
+
+
 def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer):
     """Map one graph's batched results onto the estee CSV schema."""
     rows = []
@@ -117,24 +152,25 @@ def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer):
 
 
 def agreement_pass(grid, points, encoded, groups, runners, stats):
-    """Agreement/speedup rows for the first (cluster, netmodel): per
-    graph the bucketed makespan vs the reference twin, per group the
-    warm batched per-sim time, and one ``__pergraph_path__`` row timing
-    the whole first bucket against PR-2-style per-graph runners
-    (compile + run each — the cost the bucketing removes).  The sentinel
-    row also persists the sweep-wide ``total_compiles``/``bucket_groups``
-    so the cross-PR trend view can track compile regressions."""
-    cname = grid["clusters"][0]
-    cores = parse_cluster(cname)
+    """Agreement/speedup rows for the first (cluster group, netmodel):
+    per (graph, first cluster) the bucketed makespan vs the reference
+    twin on the *unpadded* cluster, per group the warm batched per-sim
+    time, and one ``__pergraph_path__`` row timing the whole first
+    bucket against PR-2-style per-graph runners (compile + run each —
+    the cost the bucketing removes).  The sentinel row also persists the
+    sweep-wide ``total_compiles``/``bucket_groups`` so the cross-PR
+    trend view can track compile regressions."""
     netmodel = grid["netmodels"][0]
     agree_rows = []
     for sched in grid["schedulers"]:
         for gi, grp in enumerate(groups):
-            runner, _ = runners[(cname, sched, netmodel, gi)]
+            runner, _, cnames = runners[(sched, netmodel, gi)]
+            cname = cnames[0]
+            cores = parse_cluster(cname)
             t0 = time.perf_counter()
             ms2, _ = runner(points)              # warm, steady state
-            vec_us = ((time.perf_counter() - t0)
-                      / (runner.B * len(points)) * 1e6)
+            n_sims = len(cnames) * runner.B * len(points)
+            vec_us = (time.perf_counter() - t0) / n_sims * 1e6
             for b, gname in enumerate(grp.names):
                 reps, ref_us = time_reference_twin(
                     gname, sched, len(cores), cores, points[:1],
@@ -144,7 +180,7 @@ def agreement_pass(grid, points, encoded, groups, runners, stats):
                     "cluster_name": cname, "netmodel": netmodel,
                     "bucket": grp.label, "group_size": runner.B,
                     "compile_count": 1,
-                    "makespan_ratio": float(ms2[b, 0]) / reps[0].makespan,
+                    "makespan_ratio": float(ms2[0, b, 0]) / reps[0].makespan,
                     "vec_us_per_sim": vec_us,
                     "ref_us_per_sim": ref_us,
                     "speedup": ref_us / vec_us,
@@ -153,7 +189,8 @@ def agreement_pass(grid, points, encoded, groups, runners, stats):
     # own jit trace) vs the one bucketed compilation recorded cold
     sched = grid["schedulers"][0]
     grp = groups[0]
-    runner, bucket_cold = runners[(cname, sched, netmodel, 0)]
+    runner, bucket_cold, cnames = runners[(sched, netmodel, 0)]
+    cores = parse_cluster(cnames[0])
     t0 = time.perf_counter()
     for gname in grp.names:
         g, spec = encoded[gname]
@@ -162,7 +199,7 @@ def agreement_pass(grid, points, encoded, groups, runners, stats):
     pergraph_cold = time.perf_counter() - t0
     agree_rows.append({
         "graph_name": "__pergraph_path__", "scheduler_name": sched,
-        "cluster_name": cname, "netmodel": netmodel,
+        "cluster_name": cnames[0], "netmodel": netmodel,
         "bucket": grp.label, "group_size": runner.B,
         "compile_count": runner.B,
         "bucket_cold_s": round(bucket_cold, 3),
@@ -182,36 +219,38 @@ def survey(grid, out_dir=OUT_DIR, agreement=True):
     points = grid_points(grid)
     names = survey_names(grid["graphs_per_family"])
     encoded, groups = encode_graph_batch(names, seed=0, bucket=True)
+    wgroups = cluster_groups(grid["clusters"])
     rows = []
     runners = {}                 # only the agreement slice is retained
     est_caches = [{} for _ in groups]    # shared per bucket, not per runner
     trace0 = jit_trace_count()
-    for cname in grid["clusters"]:
-        cores = parse_cluster(cname)
+    for wb, cnames, cores2d in wgroups:
         for sched in grid["schedulers"]:
             for netmodel in grid["netmodels"]:
                 for gi, grp in enumerate(groups):
                     runner = BucketedGridRunner(
                         [encoded[n] for n in grp.names], sched,
-                        len(cores), cores, netmodel=netmodel,
+                        wb, cores2d, netmodel=netmodel,
                         shape=grp.shape, batch=grp.batch,
                         est_cache=est_caches[gi])
                     t0 = time.perf_counter()
-                    ms, xfer = runner(points)    # compile + run [B, N]
+                    ms, xfer = runner(points)    # compile + run [K, B, N]
                     cold_s = time.perf_counter() - t0
-                    if (cname == grid["clusters"][0]
+                    if (wb == wgroups[0][0]
                             and netmodel == grid["netmodels"][0]):
-                        runners[(cname, sched, netmodel, gi)] = (runner,
-                                                                 cold_s)
-                    for b, gname in enumerate(grp.names):
-                        rows.extend(estee_rows(gname, cname, netmodel,
-                                               sched, points, ms[b],
-                                               xfer[b]))
+                        runners[(sched, netmodel, gi)] = (runner, cold_s,
+                                                          cnames)
+                    for k, cname in enumerate(cnames):
+                        for b, gname in enumerate(grp.names):
+                            rows.extend(estee_rows(gname, cname, netmodel,
+                                                   sched, points, ms[k, b],
+                                                   xfer[k, b]))
     stats = dict(
         compiles=jit_trace_count() - trace0,
-        bucket_groups=(len(grid["clusters"]) * len(grid["schedulers"])
+        bucket_groups=(len(wgroups) * len(grid["schedulers"])
                        * len(grid["netmodels"]) * len(groups)),
         buckets=[f"{grp.label}:{','.join(grp.names)}" for grp in groups],
+        cluster_groups=[f"W{wb}:{','.join(cn)}" for wb, cn, _ in wgroups],
     )
     agree_rows = (agreement_pass(grid, points, encoded, groups, runners,
                                  stats)
@@ -239,17 +278,21 @@ def report(rows, agree_rows, stats):
               f"{geomean([a['speedup'] for a in plain]):.2f}")
     print(f"survey/jit_compiles,0,{stats['compiles']}")
     print(f"survey/bucket_groups,0,{stats['bucket_groups']}")
+    print(f"survey/cluster_groups,0,{len(stats['cluster_groups'])}")
     print(f"survey/rows,0,{len(rows)}")
 
 
 def check_compiles(stats):
-    """The one-compilation-per-bucket-group contract (ISSUE 3 acceptance;
-    asserted by CI so a per-graph recompile regression fails the build)."""
+    """The one-compilation-per-(bucket, W, scheduler, netmodel)-group
+    contract (ISSUE 3/4 acceptance; asserted by CI so a per-graph or
+    per-cluster recompile regression fails the build)."""
     if stats["compiles"] != stats["bucket_groups"]:
         raise AssertionError(
             f"jit compile count {stats['compiles']} != bucket-group count "
             f"{stats['bucket_groups']} — the bucketed survey is "
-            f"recompiling per graph (buckets: {stats['buckets']})")
+            f"recompiling per graph or per cluster (buckets: "
+            f"{stats['buckets']}; clusters: "
+            f"{stats.get('cluster_groups', [])})")
 
 
 def run(fast=True):
@@ -280,8 +323,9 @@ def main():
                                      agreement=not args.no_agreement)
     report(rows, agree_rows, stats)
     print(f"# survey: {len(rows)} grid points, {stats['compiles']} jit "
-          f"compiles for {stats['bucket_groups']} bucket groups "
-          f"({'; '.join(stats['buckets'])}) in {time.time() - t0:.1f}s "
+          f"compiles for {stats['bucket_groups']} (bucket, W, scheduler, "
+          f"netmodel) groups ({'; '.join(stats['buckets'])}; "
+          f"{'; '.join(stats['cluster_groups'])}) in {time.time() - t0:.1f}s "
           f"-> {os.path.join(args.out, 'survey.csv')}")
     if args.assert_compiles:
         try:

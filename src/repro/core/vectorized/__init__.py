@@ -5,7 +5,8 @@ from .specs import (GraphSpec, BucketedGraphSpec, BucketGroup, encode_graph,
 from .sim import (make_simulator, simulate_batch,
                   make_dynamic_simulator, simulate_dynamic_grid,
                   make_bucket_simulator, make_bucket_dynamic_simulator,
-                  DynamicGridRunner, BucketedGridRunner, jit_trace_count)
+                  DynamicGridRunner, BucketedGridRunner, jit_trace_count,
+                  DOWNLOAD_SLOTS, PAIR_SLOTS)
 from .scheduling import (VEC_SCHEDULERS, make_vec_scheduler,
                          make_bucket_scheduler,
                          make_static_blevel_scheduler,
@@ -24,6 +25,7 @@ __all__ = ["GraphSpec", "BucketedGraphSpec", "BucketGroup", "encode_graph",
            "make_dynamic_simulator", "simulate_dynamic_grid",
            "make_bucket_simulator", "make_bucket_dynamic_simulator",
            "DynamicGridRunner", "BucketedGridRunner", "jit_trace_count",
+           "DOWNLOAD_SLOTS", "PAIR_SLOTS",
            "VEC_SCHEDULERS", "make_vec_scheduler", "make_bucket_scheduler",
            "make_static_blevel_scheduler", "make_static_tlevel_scheduler",
            "make_static_mcp_scheduler", "make_etf_scheduler",

@@ -70,8 +70,37 @@ NEG = jnp.float32(-3e38)
 
 def _resolve_cores(n_workers, cores):
     """Per-worker core vector: broadcast a scalar, pass vectors through.
-    Zero-core entries are inert padding (no task fits, no slot opens)."""
+    Zero-core entries are inert padding (no task fits, no slot opens).
+    ``None`` passes through — the traced-cores binding, where the
+    cluster arrives as a runtime argument instead (DESIGN.md §3)."""
+    if cores is None:
+        return None
     return np.broadcast_to(np.asarray(cores, np.int32), (n_workers,)).copy()
+
+
+def _static_max_cores(cores_default, max_cores):
+    """The static core-count bound (python int) that sizes per-worker
+    slot timelines and start loops; with a traced cores vector it must
+    be supplied explicitly since the values are unknown at trace time."""
+    if max_cores is not None:
+        return max(int(max_cores), 1)
+    if cores_default is None:
+        raise ValueError("max_cores is required when cores is None (the "
+                         "traced-cores binding has no values to bound at "
+                         "build time)")
+    return max(int(cores_default.max()), 1)
+
+
+def _cores_arg(cores, cores_default):
+    """The cluster actually used by one call: the runtime ``cores``
+    argument (traced — one compiled program serves every same-W
+    cluster), falling back to the build-time vector."""
+    if cores is None:
+        if cores_default is None:
+            raise ValueError("built without a cluster: pass cores at call "
+                             "time")
+        cores = cores_default
+    return jnp.asarray(cores, jnp.int32)
 
 
 def bucket_blevel(bspec, est_dur):
@@ -133,16 +162,18 @@ def rank_priorities(bl):
             .at[order].set(jnp.float32(T) - jnp.arange(T, dtype=jnp.float32)))
 
 
-def _make_bucket_list_scheduler(n_workers, cores, order_fn):
+def _make_bucket_list_scheduler(n_workers, cores, order_fn, max_cores=None):
     """Shared static list-scheduling machinery: commit tasks in the order
     ``order_fn(bspec, est_dur) -> i32[T]`` (rank -> task id), each to the
     earliest-start worker.
 
-    Returns ``schedule(bspec, est_durations, est_sizes, bandwidth, seed)
-    -> (assignment i32[T], priority f32[T])`` — pure JAX, vmap-able over
-    the spec batch axis, the estimate arrays (imodes), bandwidth and seed
-    (ignored here; the uniform signature keeps every static scheduler
-    batchable the same way).
+    Returns ``schedule(bspec, est_durations, est_sizes, bandwidth, seed,
+    cores) -> (assignment i32[T], priority f32[T])`` — pure JAX, vmap-able
+    over the spec batch axis, the estimate arrays (imodes), bandwidth,
+    seed (ignored here; the uniform signature keeps every static
+    scheduler batchable the same way) and the per-worker ``cores``
+    vector (traced: one compiled program serves every same-W cluster;
+    ``None`` falls back to the build-time cluster).
 
     Worker selection is the earliest-start estimate over per-core free
     times with uncontended transfer costs, committed task by task — the
@@ -151,13 +182,14 @@ def _make_bucket_list_scheduler(n_workers, cores, order_fn):
     (a no-op on the timeline); padded edges never feed data-ready times.
     """
     W = n_workers
-    cores = _resolve_cores(n_workers, cores)
-    C = max(int(cores.max()), 1)
-    cores_j = jnp.asarray(cores)
+    cores_default = _resolve_cores(n_workers, cores)
+    C = _static_max_cores(cores_default, max_cores)
     w_ids = jnp.arange(W)
 
-    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0),
+                 cores=None):
         del seed
+        cores_j = _cores_arg(cores, cores_default)
         bspec = as_jax(bspec)
         T = bspec.T
         e_task, e_obj = bspec.edge_task, bspec.edge_obj
@@ -203,26 +235,28 @@ def _make_bucket_list_scheduler(n_workers, cores, order_fn):
     return schedule
 
 
-def make_bucket_blevel_scheduler(n_workers, cores):
+def make_bucket_blevel_scheduler(n_workers, cores, max_cores=None):
     """blevel/HLFET: decreasing estimated b-level (ties: smaller id).
     Decreasing b-level is topological for positive durations, so no
     repair pass is needed (mirrors ``DetBlevelScheduler``)."""
     def order_fn(bspec, est_dur):
         return jnp.argsort(-bucket_blevel(bspec, est_dur), stable=True)
 
-    return _make_bucket_list_scheduler(n_workers, cores, order_fn)
+    return _make_bucket_list_scheduler(n_workers, cores, order_fn,
+                                       max_cores)
 
 
-def make_bucket_tlevel_scheduler(n_workers, cores):
+def make_bucket_tlevel_scheduler(n_workers, cores, max_cores=None):
     """tlevel/SCFET: ascending estimated t-level (ties: smaller id);
     topological for positive durations (mirrors ``DetTlevelScheduler``)."""
     def order_fn(bspec, est_dur):
         return jnp.argsort(bucket_tlevel(bspec, est_dur), stable=True)
 
-    return _make_bucket_list_scheduler(n_workers, cores, order_fn)
+    return _make_bucket_list_scheduler(n_workers, cores, order_fn,
+                                       max_cores)
 
 
-def make_bucket_mcp_scheduler(n_workers, cores):
+def make_bucket_mcp_scheduler(n_workers, cores, max_cores=None):
     """Simplified MCP: ascending ALAP = CP - blevel (ties: smaller id) —
     the same simplification as the reference ``MCPScheduler`` (mirrors
     ``DetMCPScheduler``)."""
@@ -230,28 +264,30 @@ def make_bucket_mcp_scheduler(n_workers, cores):
         bl = bucket_blevel(bspec, est_dur)
         return jnp.argsort(jnp.max(bl) - bl, stable=True)
 
-    return _make_bucket_list_scheduler(n_workers, cores, order_fn)
+    return _make_bucket_list_scheduler(n_workers, cores, order_fn,
+                                       max_cores)
 
 
-def make_bucket_etf_scheduler(n_workers, cores):
+def make_bucket_etf_scheduler(n_workers, cores, max_cores=None):
     """ETF/DLS-style earliest-finish placer: at every step pick, over all
     frontier tasks (parents already committed) and eligible workers, the
     pair with the lexicographically smallest (estimated start, -b-level,
     task id, worker id) and commit it (mirrors ``DetETFScheduler``).
 
-    Same ``schedule(bspec, est_dur, est_size, bandwidth, seed)``
+    Same ``schedule(bspec, est_dur, est_size, bandwidth, seed, cores)``
     signature as the list schedulers; T committing steps, each scanning
     the dense [T, W] estimate matrix.  Padded tasks are permanent
     zero-cost frontier members; committing one writes a worker's
     earliest slot back unchanged, so real pair choices are unaffected.
     """
     W = n_workers
-    cores = _resolve_cores(n_workers, cores)
-    C = max(int(cores.max()), 1)
-    cores_j = jnp.asarray(cores)
+    cores_default = _resolve_cores(n_workers, cores)
+    C = _static_max_cores(cores_default, max_cores)
 
-    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0),
+                 cores=None):
         del seed
+        cores_j = _cores_arg(cores, cores_default)
         bspec = as_jax(bspec)
         T = bspec.T
         e_task, e_obj = bspec.edge_task, bspec.edge_obj
@@ -317,17 +353,19 @@ def _mix32(x):
     return x
 
 
-def make_bucket_random_scheduler(n_workers, cores):
+def make_bucket_random_scheduler(n_workers, cores, max_cores=None):
     """Counter-based random static scheduler: task t goes to the
     ``hash(seed, t) mod n_eligible``-th eligible worker (id order) —
     stateless, so a whole seed batch vmaps (mirrors ``random-det``).
     Priorities are the usual decreasing-estimated-b-level ranks.  Real
     tasks keep their ids under padding, so placements are pad-invariant."""
-    cores = _resolve_cores(n_workers, cores)
-    cores_j = jnp.asarray(cores)
+    del max_cores                    # no per-core timeline to bound
+    cores_default = _resolve_cores(n_workers, cores)
 
-    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0)):
+    def schedule(bspec, est_dur, est_size, bandwidth, seed=jnp.int32(0),
+                 cores=None):
         del est_size, bandwidth
+        cores_j = _cores_arg(cores, cores_default)
         bspec = as_jax(bspec)
         T, cpus = bspec.T, bspec.cpus
         est_dur = jnp.asarray(est_dur, jnp.float32)
@@ -354,18 +392,21 @@ _BUCKET_FACTORIES = {
 }
 
 
-def make_bucket_scheduler(n_workers, cores, name):
+def make_bucket_scheduler(n_workers, cores, name, max_cores=None):
     """Factory for the *static* bucket schedulers: returns
-    ``schedule(bspec, est_durations, est_sizes, bandwidth, seed) ->
-    (assignment i32[T], priority f32[T])`` with the graph late-bound, so
-    one trace serves a whole shape bucket.  Raises for dynamic entries
-    (``greedy`` has no one-shot schedule)."""
+    ``schedule(bspec, est_durations, est_sizes, bandwidth, seed, cores)
+    -> (assignment i32[T], priority f32[T])`` with the graph late-bound
+    (one trace per shape bucket) and the cluster late-bound too —
+    ``cores=None`` at build time plus a static ``max_cores`` bound makes
+    the per-worker vector a traced argument, so one trace also serves
+    every same-W cluster.  Raises for dynamic entries (``greedy`` has no
+    one-shot schedule)."""
     if name not in _BUCKET_FACTORIES:
         raise KeyError(
             f"no static vectorized scheduler {name!r} "
             f"(have {sorted(_BUCKET_FACTORIES)}; "
             f"dynamic: {sorted(k for k, v in VEC_SCHEDULERS.items() if v == 'dynamic')})")
-    return _BUCKET_FACTORIES[name](n_workers, cores)
+    return _BUCKET_FACTORIES[name](n_workers, cores, max_cores)
 
 
 def make_vec_scheduler(spec, n_workers, cores, name):
@@ -421,7 +462,7 @@ def make_transfer_costs(spec, n_workers):
 
 
 def make_bucket_greedy_placer(n_workers, cores):
-    """Returns ``place(bspec, ready_unassigned, cost_tw, load0) ->
+    """Returns ``place(bspec, ready_unassigned, cost_tw, load0, cores) ->
     i32[T]`` (proposed worker per task, -1 where none).
 
     Tasks are processed in id order (the order ready events are collected
@@ -429,13 +470,14 @@ def make_bucket_greedy_placer(n_workers, cores):
     (transfer cost, queued load, worker id), and placing a task bumps the
     load its successors see — the same sequential rule as
     ``GreedyWorkerScheduler.schedule``.  Padded tasks are never ready, so
-    they place nothing and bump no loads.
+    they place nothing and bump no loads.  ``cores`` is traced like the
+    bucket schedulers' (``None`` falls back to the build-time cluster).
     """
-    cores = _resolve_cores(n_workers, cores)
-    cores_j = jnp.asarray(cores)
+    cores_default = _resolve_cores(n_workers, cores)
     BIG = jnp.int32(np.iinfo(np.int32).max)
 
-    def place(bspec, ready_unassigned, cost_tw, load0):
+    def place(bspec, ready_unassigned, cost_tw, load0, cores=None):
+        cores_j = _cores_arg(cores, cores_default)
         bspec = as_jax(bspec)
         cpus = bspec.cpus
 

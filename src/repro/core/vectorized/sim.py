@@ -31,15 +31,26 @@ edges never satisfy inputs, never carry flows, never claim a
 (object, destination) dedup key and never contribute download priority;
 invalid objects have zero size.  The cluster is a per-worker
 ``cores: i32[W]`` vector — heterogeneous shapes (``1x8+4x2``) and
-zero-core padded workers ride the same code path as homogeneous ones.
+zero-core padded workers ride the same code path as homogeneous ones —
+and may be *late-bound*: build with ``cores=None`` + a static
+``max_cores`` bound and pass the vector at call time (traced), so one
+compiled program serves every same-W cluster signature and
+``BucketedGridRunner`` stacks a whole cluster group on a vmap axis.
 
 Shared semantics mirror the reference simulator (``core.simulator``):
 
 * downloads come from the producing worker, deduplicated per
-  (object, destination); slot limits 4/worker + 2/source pair (max-min
-  model) or unlimited (simple model); priorities boosted for ready tasks;
+  (object, destination); slot limits ``DOWNLOAD_SLOTS``/worker +
+  ``PAIR_SLOTS``/source pair (max-min model) or unlimited (simple
+  model); priorities boosted for ready tasks;
 * the Appendix-A task start rule incl. the priority/blocking guard;
-* max-min progressive filling recomputed at every event.
+* max-min progressive filling recomputed at every event — over the
+  bounded *flow-slot pool* (``S = DOWNLOAD_SLOTS * W`` in-flight
+  flows, DESIGN.md §3) rather than all E edges, with the solver routed
+  through ``kernels.ops.waterfill`` (Pallas MXU kernel on TPU, jnp
+  progressive filling elsewhere; ``waterfill_impl``).  The per-edge
+  path survives as ``flow_slots=False``, the near-bitwise parity
+  baseline (``tests/test_flowslots.py``).
 
 The static/list scheduler family (``blevel``/``tlevel``/``mcp``/``etf``/
 ``random``) and the dynamic ``greedy`` run in-loop; rescheduling work
@@ -66,6 +77,72 @@ BYTES_EPS = 1e-3
 NEG = jnp.float32(-3e38)
 NEG_TIME = jnp.float32(-1e30)
 
+# Appendix-A download-slot limits (shared with the reference worker):
+# at most DOWNLOAD_SLOTS concurrent downloads per destination worker and
+# PAIR_SLOTS per (source, destination) pair under the max-min model.
+# They also bound the *flow-slot pool*: at any instant at most
+# S = DOWNLOAD_SLOTS * W flows are in flight, so the waterfill, rate
+# integration and next-event reduction run over [S] instead of [E].
+DOWNLOAD_SLOTS = 4
+PAIR_SLOTS = 2
+
+
+def _resolve_waterfill_impl(waterfill_impl: str) -> str:
+    if waterfill_impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if waterfill_impl not in ("jnp", "pallas"):
+        raise ValueError(f"waterfill_impl must be 'auto'|'jnp'|'pallas', "
+                         f"got {waterfill_impl!r}")
+    return waterfill_impl
+
+
+def _make_waterfill(waterfill_impl: str):
+    """The per-simulation max-min rate solver: ``wf(src, dst, active,
+    caps) -> rates``.  ``"jnp"`` is the progressive-filling while_loop
+    (``vectorized.waterfill`` — CPU and fallback path); ``"pallas"``
+    routes through ``kernels.ops.waterfill`` so the one-hot/MXU Pallas
+    kernel runs natively on TPU (interpret mode elsewhere) with the
+    vmap batch as the Pallas grid.  ``"auto"`` picks per backend."""
+    if _resolve_waterfill_impl(waterfill_impl) == "pallas":
+        from ...kernels.ops import waterfill as kernel_waterfill
+
+        def wf(src, dst, active, caps):
+            return kernel_waterfill(src, dst, active, caps, caps,
+                                    use_pallas=True)
+        return wf
+    return lambda src, dst, active, caps: waterfill(src, dst, active,
+                                                    caps, caps)
+
+
+def _acquire_slots(st, pick, dst_e, src_e, bytes_e, W):
+    """Move this round's picked flows (<= 1 per destination worker —
+    ``_pick_per_bucket``'s contract) into the flow-slot pool: each
+    destination worker owns ``DOWNLOAD_SLOTS`` consecutive slots, and a
+    picked flow takes the first free one.  Eligibility already enforced
+    occupancy < DOWNLOAD_SLOTS, so a free slot must exist; ``overflow``
+    records any violation of that invariant and poisons ``ok``."""
+    E = pick.shape[0]
+    e_ids = jnp.arange(E, dtype=jnp.int32)
+    # the (single) picked edge per destination worker, -1 where none
+    pe = (jnp.full(W, -1, jnp.int32)
+          .at[dst_e].max(jnp.where(pick, e_ids, -1)))
+    occ_w = (st["slot_edge"] >= 0).reshape(W, DOWNLOAD_SLOTS)
+    first_free = jnp.argmin(occ_w.astype(jnp.int32), axis=1)
+    has_free = ~jnp.all(occ_w, axis=1)
+    take = (pe >= 0) & has_free
+    idx = jnp.arange(W, dtype=jnp.int32) * DOWNLOAD_SLOTS + first_free
+    pe_c = jnp.clip(pe, 0)
+    return dict(
+        st,
+        slot_edge=st["slot_edge"].at[idx].set(
+            jnp.where(take, pe_c, st["slot_edge"][idx])),
+        slot_src=st["slot_src"].at[idx].set(
+            jnp.where(take, src_e[pe_c], st["slot_src"][idx])),
+        slot_rem=st["slot_rem"].at[idx].set(
+            jnp.where(take, bytes_e[pe_c], st["slot_rem"][idx])),
+        overflow=st["overflow"] | jnp.any((pe >= 0) & ~has_free),
+    )
+
 # jit-trace odometer: every trace of a simulator ``run`` body bumps it
 # (tracing happens exactly once per XLA compilation; eager calls are
 # filtered out via ``trace_state_clean``), so callers can assert
@@ -89,10 +166,13 @@ def jit_trace_count() -> int:
 
 
 def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
-                          flow_rounds: int = 4, max_steps: int = None):
+                          flow_rounds: int = 4, max_steps: int = None, *,
+                          max_cores: int = None, flow_slots=None,
+                          waterfill_impl: str = "auto",
+                          return_steps: bool = False):
     """Returns ``run(bspec, assignment, priority, durations, sizes,
-    bandwidth) -> (makespan, transferred_bytes, ok)`` — a pure JAX
-    function with the graph late-bound as a ``BucketedGraphSpec``.
+    bandwidth, cores) -> (makespan, transferred_bytes, ok)`` — a pure
+    JAX function with the graph late-bound as a ``BucketedGraphSpec``.
 
     ``assignment``: i32[T] worker per task (every entry must be a valid
     worker index, padded entries included — their value is ignored);
@@ -101,17 +181,43 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
     spec's (pass None normally) so sweeps/imodes/GA can batch them;
     ``bandwidth`` is a f32 scalar.  ``ok`` is False (and makespan NaN)
     when the ``max_steps`` event budget ran out before every valid task
-    finished — e.g. an assignment whose tasks can never start;
-    ``simulate_batch`` turns that into an error.
+    finished — e.g. an assignment whose tasks can never start —
+    or (flow-slot path) on a slot-pool overflow, which the Appendix-A
+    limits make impossible by construction; ``simulate_batch`` turns
+    that into an error.
+
+    The cluster may be late-bound too: build with ``cores=None`` plus a
+    static ``max_cores`` bound and pass the per-worker ``cores: i32[W]``
+    vector at call time — it is traced, so one compiled program serves
+    every same-W cluster signature (zero-core entries = padded, absent
+    workers).
+
+    Under the max-min model the network state rides the bounded
+    *flow-slot pool* (``S = DOWNLOAD_SLOTS * W`` slots, DESIGN.md §3):
+    the waterfill, rate integration and next-event reduction cost O(S)
+    per event instead of O(E).  ``flow_slots=False`` keeps the legacy
+    per-edge ``f32[E]`` state (the parity baseline, and what the simple
+    model — no slot limits — always uses).  ``waterfill_impl`` routes
+    the max-min solver: ``"jnp"`` progressive filling, ``"pallas"`` the
+    MXU kernel via ``kernels.ops``, ``"auto"`` pallas iff on TPU.
+    ``return_steps=True`` appends the executed event count to the
+    return tuple (benchmark instrumentation).
     """
     W = n_workers
-    cores = _resolve_cores(n_workers, cores)
-    max_cores = max(int(cores.max()), 1)
-    cores_j = jnp.asarray(cores)
+    cores_default = _resolve_cores(n_workers, cores)
+    if max_cores is None:
+        if cores_default is None:
+            raise ValueError("max_cores is required when cores is None")
+        max_cores = max(int(cores_default.max()), 1)
+    max_cores = max(int(max_cores), 1)
     simple = netmodel == "simple"
+    use_slots_cfg = (flow_slots is not False) and not simple
+    wf = None if simple else _make_waterfill(waterfill_impl)
+    S = W * DOWNLOAD_SLOTS
+    slot_dst = jnp.arange(S, dtype=jnp.int32) // DOWNLOAD_SLOTS
 
     def run(bspec, assignment, priority, durations=None, sizes=None,
-            bandwidth=jnp.float32(100 * 1024 * 1024)):
+            bandwidth=jnp.float32(100 * 1024 * 1024), cores=None):
         _count_trace()
         bspec = as_jax(bspec)
         T, O, E = bspec.T, bspec.O, bspec.E
@@ -124,12 +230,21 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
         sizes = jnp.asarray(bspec.sizes if sizes is None else sizes,
                             jnp.float32)
         bandwidth = jnp.asarray(bandwidth, jnp.float32)
+        if cores is None:
+            if cores_default is None:
+                raise ValueError("simulator built without a cluster: pass "
+                                 "cores at call time")
+            cores = cores_default
+        cores_j = jnp.asarray(cores, jnp.int32)
         assignment = jnp.clip(jnp.asarray(assignment, jnp.int32), 0, W - 1)
         priority = jnp.asarray(priority, jnp.float32)
+        use_slots = use_slots_cfg and E > 0
 
         obj_worker = assignment[producer]          # where each obj is born
         f_dst = assignment[e_task]                 # flow = edge
         f_src = obj_worker[e_obj]
+        prod_task_e = producer[e_obj]              # producing task per edge
+        prio_e = priority[e_task]                  # static: hoisted gathers
         cross = (f_src != f_dst) & edge_valid
         # dedup: one flow per (obj, dst); rep = smallest valid edge idx
         # in bucket (invalid edges alias key (0, dst) — masked out here)
@@ -151,44 +266,66 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
             free=cores_j.astype(jnp.int32),
             f_started=jnp.zeros(E, bool),
             f_done=jnp.zeros(E, bool),
-            f_rem=f_bytes,
             steps=jnp.int32(0),
         )
+        if use_slots:
+            # in-flight flow state lives in the compact slot pool; the
+            # per-edge f32[E] remaining-bytes carry disappears entirely
+            state0.update(
+                slot_edge=jnp.full(S, -1, jnp.int32),
+                slot_src=jnp.zeros(S, jnp.int32),
+                slot_rem=jnp.zeros(S, jnp.float32),
+                overflow=jnp.bool_(False),
+            )
+        else:
+            state0["f_rem"] = f_bytes
 
         def edge_satisfied(st):
             """input edge e is satisfied at the consumer's worker."""
-            prod_done = st["t_done"][producer[e_obj]]
+            prod_done = st["t_done"][prod_task_e]
             local = prod_done & ~cross & edge_valid
             moved = st["f_done"][rep] & cross
             return local | moved
 
-        def task_inputs_produced(st):
-            prod_done = st["t_done"][producer[e_obj]] & edge_valid
-            cnt = jnp.zeros(T, jnp.int32).at[e_task].add(
-                prod_done.astype(jnp.int32))
-            return cnt >= n_inputs
-
         def start_flows(st):
-            produced = st["t_done"][producer[e_obj]]
-            ready_boost = task_inputs_produced(st)[e_task].astype(jnp.float32)
+            produced = st["t_done"][prod_task_e]
+            cnt = jnp.zeros(T, jnp.int32).at[e_task].add(
+                (produced & edge_valid).astype(jnp.int32))
+            ready_boost = (cnt >= n_inputs)[e_task].astype(jnp.float32)
             # download priority = max over same (obj,dst) edges
-            raw = priority[e_task] + READY_BOOST * ready_boost
-            raw = jnp.where(edge_valid, raw, NEG)
+            raw = jnp.where(edge_valid, prio_e + READY_BOOST * ready_boost,
+                            NEG)
             mx = jnp.full(O * W, NEG, jnp.float32).at[key].max(raw)
             f_prio = mx[key]
             if simple:
                 eligible = needed & ~st["f_started"] & produced
                 st = dict(st, f_started=st["f_started"] | eligible)
                 return st
+            # round-invariant eligibility base; only the slot-limit
+            # masks and this event's own picks change per round
+            base = needed & ~st["f_started"] & produced
             for _ in range(flow_rounds):
-                active = st["f_started"] & ~st["f_done"]
-                af = active.astype(jnp.int32)
-                dcnt = jnp.zeros(W, jnp.int32).at[f_dst].add(af * needed)
-                pcnt = jnp.zeros(W * W, jnp.int32).at[pair].add(af * needed)
-                eligible = (needed & ~st["f_started"] & produced
-                            & (dcnt[f_dst] < 4) & (pcnt[pair] < 2))
+                if use_slots:
+                    # slot occupancy *is* the Appendix-A accounting
+                    occ = st["slot_edge"] >= 0
+                    dcnt = (occ.reshape(W, DOWNLOAD_SLOTS)
+                            .sum(axis=1, dtype=jnp.int32))
+                    pair_s = st["slot_src"] * W + slot_dst
+                    pcnt = (jnp.zeros(W * W, jnp.int32)
+                            .at[pair_s].add(occ.astype(jnp.int32)))
+                else:
+                    active = st["f_started"] & ~st["f_done"]
+                    af = active.astype(jnp.int32)
+                    dcnt = jnp.zeros(W, jnp.int32).at[f_dst].add(af * needed)
+                    pcnt = (jnp.zeros(W * W, jnp.int32)
+                            .at[pair].add(af * needed))
+                eligible = (base & (dcnt[f_dst] < DOWNLOAD_SLOTS)
+                            & (pcnt[pair] < PAIR_SLOTS))
                 pick = _pick_per_bucket(f_dst, W, eligible, f_prio)
+                base = base & ~pick
                 st = dict(st, f_started=st["f_started"] | pick)
+                if use_slots:
+                    st = _acquire_slots(st, pick, f_dst, f_src, f_bytes, W)
             return st
 
         def start_tasks(st):
@@ -215,11 +352,15 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
             return st
 
         def rates_of(st):
-            active = st["f_started"] & ~st["f_done"] & needed
             if simple:
+                active = st["f_started"] & ~st["f_done"] & needed
                 return jnp.where(active, bandwidth, 0.0)
             caps = jnp.full(W, bandwidth, jnp.float32)
-            return waterfill(f_src, f_dst, active, caps, caps)
+            if use_slots:
+                occ = st["slot_edge"] >= 0
+                return wf(st["slot_src"], slot_dst, occ, caps)
+            active = st["f_started"] & ~st["f_done"] & needed
+            return wf(f_src, f_dst, active, caps)
 
         def body(st):
             st = start_flows(st)
@@ -227,28 +368,40 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
             rates = rates_of(st)
             running = st["t_started"] & ~st["t_done"]
             t_next = jnp.min(jnp.where(running, st["t_finish"], jnp.inf))
-            active = st["f_started"] & ~st["f_done"] & needed
             # f32 time resolution: ETAs below the representable step at
             # `now` are completed immediately (mirrors the reference
             # simulator's sub-byte remainder rule, scaled for f32).
             gran = st["now"] * 6e-7 + TIME_EPS
-            f_eta = jnp.where(active & (rates > 0), st["f_rem"] / rates,
-                              jnp.inf)
+            if use_slots:
+                active = st["slot_edge"] >= 0
+                rem = st["slot_rem"]
+            else:
+                active = st["f_started"] & ~st["f_done"] & needed
+                rem = st["f_rem"]
+            f_eta = jnp.where(active & (rates > 0), rem / rates, jnp.inf)
             f_eta = jnp.where(f_eta <= gran, 0.0, f_eta)
             f_next = st["now"] + jnp.min(f_eta, initial=jnp.inf)
             nxt = jnp.minimum(t_next, f_next)
             nxt = jnp.maximum(nxt, st["now"])          # never go back
             dt = jnp.where(jnp.isfinite(nxt), nxt - st["now"], 0.0)
             now = jnp.where(jnp.isfinite(nxt), nxt, st["now"])
-            f_rem = jnp.where(active, st["f_rem"] - rates * dt, st["f_rem"])
-            f_done = st["f_done"] | (active & (
-                (f_rem <= BYTES_EPS) | (f_rem <= rates * gran)))
+            rem = jnp.where(active, rem - rates * dt, rem)
+            done_now = active & ((rem <= BYTES_EPS) | (rem <= rates * gran))
             t_newly = running & (st["t_finish"] <= now + TIME_EPS)
             free = st["free"] + jnp.zeros(W, jnp.int32).at[assignment].add(
                 jnp.where(t_newly, cpus, 0))
-            return dict(st, now=now, f_rem=f_rem, f_done=f_done,
-                        t_done=st["t_done"] | t_newly, free=free,
-                        steps=st["steps"] + 1)
+            st = dict(st, now=now, t_done=st["t_done"] | t_newly, free=free,
+                      steps=st["steps"] + 1)
+            if use_slots:
+                # completion flags scatter back per edge; finished slots
+                # release immediately (free for next event's acquires)
+                newly_done = (jnp.zeros(E, bool)
+                              .at[jnp.clip(st["slot_edge"], 0)].max(done_now))
+                return dict(st, slot_rem=rem,
+                            slot_edge=jnp.where(done_now, -1,
+                                                st["slot_edge"]),
+                            f_done=st["f_done"] | newly_done)
+            return dict(st, f_rem=rem, f_done=st["f_done"] | done_now)
 
         def cond(st):
             return (~jnp.all(st["t_done"])) & (st["steps"] < steps_cap)
@@ -258,7 +411,11 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
                                      st["t_finish"], 0.0))
         transferred = jnp.sum(jnp.where(needed & st["f_done"], f_bytes, 0.0))
         ok = jnp.all(st["t_done"])
+        if use_slots:
+            ok = ok & ~st["overflow"]
         makespan = jnp.where(ok, makespan, jnp.nan)
+        if return_steps:
+            return makespan, transferred, ok, st["steps"]
         return makespan, transferred, ok
 
     return run
@@ -266,13 +423,15 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
 
 def make_simulator(spec: GraphSpec, n_workers: int, cores,
                    netmodel: str = "maxmin", flow_rounds: int = 4,
-                   max_steps: int = None):
+                   max_steps: int = None, **kwargs):
     """Legacy per-graph binding of ``make_bucket_simulator``: returns
     ``run(assignment, priority, durations, sizes, bandwidth) ->
-    (makespan, transferred_bytes, ok)`` with ``spec`` baked in."""
+    (makespan, transferred_bytes, ok)`` with ``spec`` baked in.
+    Keyword-only options (``flow_slots``, ``waterfill_impl``,
+    ``return_steps``) pass through."""
     bspec = as_bucketed(spec)
     brun = make_bucket_simulator(n_workers, cores, netmodel, flow_rounds,
-                                 max_steps)
+                                 max_steps, **kwargs)
 
     def run(assignment, priority, durations=None, sizes=None,
             bandwidth=jnp.float32(100 * 1024 * 1024)):
@@ -288,12 +447,12 @@ def _pick_per_bucket(bucket, n_buckets, eligible, *keys):
     cand = eligible
     for k in keys:
         kk = jnp.where(cand, k, NEG)
-        m = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(kk)
-        cand = cand & (kk == m[bucket]) & (m[bucket] > NEG)
+        mb = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(kk)[bucket]
+        cand = cand & (kk == mb) & (mb > NEG)
     idx = jnp.arange(bucket.shape[0], dtype=jnp.float32)
     ii = jnp.where(cand, -idx, NEG)
-    m = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(ii)
-    return cand & (ii == m[bucket])
+    mb = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(ii)[bucket]
+    return cand & (ii == mb)
 
 
 def _check_ok(ok, context: str):
@@ -341,10 +500,13 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
                                   scheduler: str = "blevel",
                                   netmodel: str = "maxmin",
                                   flow_rounds: int = 4,
-                                  max_steps: int = None):
+                                  max_steps: int = None, *,
+                                  max_cores: int = None, flow_slots=None,
+                                  waterfill_impl: str = "auto",
+                                  return_steps: bool = False):
     """Returns ``run(bspec, est_durations, est_sizes, msd, decision_delay,
-    bandwidth, seed) -> (makespan, transferred_bytes, ok)`` — a pure JAX
-    function mirroring the reference simulator's event loop
+    bandwidth, seed, cores) -> (makespan, transferred_bytes, ok)`` — a
+    pure JAX function mirroring the reference simulator's event loop
     (``Simulator._step``) including its dynamic-scheduling machinery:
 
     * scheduler invocations are rate-limited by ``msd``; events (task
@@ -379,33 +541,55 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
     representative is pinned dynamically: the first edge whose download
     starts claims the (object, destination) key and every later
     same-key edge sees the object as already downloading/present.
+
+    The keyword-only options mirror ``make_bucket_simulator``: a
+    late-bound traced ``cores`` vector (build with ``cores=None`` + a
+    static ``max_cores``), the bounded flow-slot pool on the max-min
+    path (``flow_slots``), the routed max-min solver
+    (``waterfill_impl``), and ``return_steps``.
     """
     if scheduler not in VEC_SCHEDULERS:
         raise KeyError(f"unknown vectorized scheduler {scheduler!r} "
                        f"(have {sorted(VEC_SCHEDULERS)})")
     W = n_workers
-    cores = _resolve_cores(n_workers, cores)
-    max_cores = max(int(cores.max()), 1)
-    cores_j = jnp.asarray(cores)
+    cores_default = _resolve_cores(n_workers, cores)
+    if max_cores is None:
+        if cores_default is None:
+            raise ValueError("max_cores is required when cores is None")
+        max_cores = max(int(cores_default.max()), 1)
+    max_cores = max(int(max_cores), 1)
     simple = netmodel == "simple"
+    use_slots_cfg = (flow_slots is not False) and not simple
+    wf = None if simple else _make_waterfill(waterfill_impl)
+    S = W * DOWNLOAD_SLOTS
+    slot_dst = jnp.arange(S, dtype=jnp.int32) // DOWNLOAD_SLOTS
     dynamic_sched = VEC_SCHEDULERS[scheduler] == "dynamic"
 
     if dynamic_sched:
         static_schedule = None
-        greedy_place = make_bucket_greedy_placer(W, cores)
+        greedy_place = make_bucket_greedy_placer(W, cores_default)
     else:
-        static_schedule = make_bucket_scheduler(W, cores, scheduler)
+        static_schedule = make_bucket_scheduler(W, cores_default, scheduler,
+                                                max_cores)
         greedy_place = None
 
     def run(bspec, est_durations, est_sizes, msd=jnp.float32(0.0),
             decision_delay=jnp.float32(0.0),
-            bandwidth=jnp.float32(100 * 1024 * 1024), seed=jnp.int32(0)):
+            bandwidth=jnp.float32(100 * 1024 * 1024), seed=jnp.int32(0),
+            cores=None):
         _count_trace()
         bspec = as_jax(bspec)
         T, O, E = bspec.T, bspec.O, bspec.E
         F = O * W
         steps_cap = (max_steps if max_steps is not None
                      else 10 * (T + E) + 8 * W + 1024)
+        if cores is None:
+            if cores_default is None:
+                raise ValueError("simulator built without a cluster: pass "
+                                 "cores at call time")
+            cores = cores_default
+        cores_j = jnp.asarray(cores, jnp.int32)
+        use_slots = use_slots_cfg and E > 0
         e_task, e_obj = bspec.edge_task, bspec.edge_obj
         producer, n_inputs, cpus = bspec.producer, bspec.n_inputs, bspec.cpus
         task_valid, obj_valid, edge_valid = (bspec.task_valid,
@@ -415,6 +599,7 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
         sizes_true = jnp.asarray(bspec.sizes, jnp.float32)
         e_ids = jnp.arange(E, dtype=jnp.int32)
         e_bytes = jnp.where(edge_valid, sizes_true[e_obj], 0.0)
+        prod_task_e = producer[e_obj]              # producing task per edge
         # estimates are defensively masked: padded entries always 0, so
         # levels/costs of real tasks cannot depend on filler values
         est_dur = jnp.where(task_valid,
@@ -435,7 +620,7 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             # static schedule == the single invocation at t=0, computed
             # from pure estimates; it reaches workers after the delay
             aw0, prio0 = static_schedule(bspec, est_dur, est_size,
-                                         bandwidth_, seed_)
+                                         bandwidth_, seed_, cores_j)
             p_worker0 = jnp.where(task_valid, aw0, -1)
             p_prio0 = prio0
             p_time0 = jnp.where(task_valid, delay, jnp.inf)
@@ -453,9 +638,17 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             free=cores_j.astype(jnp.int32),
             f_started=jnp.zeros(E, bool),        # flow = input edge
             f_done=jnp.zeros(E, bool),
-            f_rem=e_bytes,
             steps=jnp.int32(0),
         )
+        if use_slots:
+            state0.update(
+                slot_edge=jnp.full(S, -1, jnp.int32),
+                slot_src=jnp.zeros(S, jnp.int32),
+                slot_rem=jnp.zeros(S, jnp.float32),
+                overflow=jnp.bool_(False),
+            )
+        else:
+            state0["f_rem"] = e_bytes
 
         # ------------------------------------------------ shared views
         def edge_views(st):
@@ -465,7 +658,7 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             them is masked so the clip-to-0 of unassigned or padded
             edges never pollutes."""
             aw_e = st["aw"][e_task]
-            src_e = st["aw"][producer[e_obj]]
+            src_e = st["aw"][prod_task_e]
             key_e = e_obj * W + jnp.clip(aw_e, 0)
             return aw_e, src_e, key_e
 
@@ -476,7 +669,7 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             return st["t_done"][producer]                       # bool[O]
 
         def inputs_produced(st):
-            prod_e = produced_of(st)[e_obj] & edge_valid
+            prod_e = st["t_done"][prod_task_e] & edge_valid
             cnt = (jnp.zeros(T, jnp.int32)
                    .at[e_task].add(prod_e.astype(jnp.int32)))
             return cnt >= n_inputs                              # bool[T]
@@ -515,7 +708,7 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             qworker = jnp.where(st["aw"] >= 0, st["aw"], st["pw"])
             load0 = (jnp.zeros(W, jnp.int32)
                      .at[jnp.clip(qworker, 0)].add(queued.astype(jnp.int32)))
-            new_pw = greedy_place(bspec, ready_un, cost_tw, load0)
+            new_pw = greedy_place(bspec, ready_un, cost_tw, load0, cores_j)
             newly = due & (new_pw >= 0)
             return dict(
                 st,
@@ -531,7 +724,7 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             if E == 0:       # no data objects => no network at all
                 return st
             aw_e, src_e, key_e = edge_views(st)
-            prod_e = st["t_done"][producer[e_obj]]
+            prod_e = st["t_done"][prod_task_e]
             cross = ((aw_e >= 0) & (src_e >= 0) & (src_e != aw_e)
                      & edge_valid)
             # download priority: max over same-key edges, ready boosted
@@ -551,21 +744,38 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
                 pick = eligible & (rep[key_e] == e_ids)
                 return dict(st, f_started=st["f_started"] | pick)
             pair = jnp.clip(src_e, 0) * W + bucket
+            # round-invariant eligibility base; the handled-key mask and
+            # slot limits are what this event's own picks update
+            base = cross & prod_e & ~key_reduce_or(key_e,
+                                                   st["f_started"])[key_e]
             for _ in range(flow_rounds):
-                active = (st["f_started"] & ~st["f_done"]).astype(jnp.int32)
-                dcnt = jnp.zeros(W, jnp.int32).at[bucket].add(active)
-                pcnt = jnp.zeros(W * W, jnp.int32).at[pair].add(active)
-                handled = key_reduce_or(key_e, st["f_started"])
-                eligible = (cross & prod_e & ~handled[key_e]
-                            & (dcnt[bucket] < 4) & (pcnt[pair] < 2))
-                # same key => same bucket, so one pick also dedups
+                if use_slots:
+                    occ = st["slot_edge"] >= 0
+                    dcnt = (occ.reshape(W, DOWNLOAD_SLOTS)
+                            .sum(axis=1, dtype=jnp.int32))
+                    pair_s = st["slot_src"] * W + slot_dst
+                    pcnt = (jnp.zeros(W * W, jnp.int32)
+                            .at[pair_s].add(occ.astype(jnp.int32)))
+                else:
+                    active = (st["f_started"]
+                              & ~st["f_done"]).astype(jnp.int32)
+                    dcnt = jnp.zeros(W, jnp.int32).at[bucket].add(active)
+                    pcnt = jnp.zeros(W * W, jnp.int32).at[pair].add(active)
+                eligible = (base & (dcnt[bucket] < DOWNLOAD_SLOTS)
+                            & (pcnt[pair] < PAIR_SLOTS))
+                # same key => same bucket, so one pick also dedups; all
+                # same-key edges leave the base once one of them starts
                 pick = _pick_per_bucket(bucket, W, eligible, f_prio)
+                base = base & ~key_reduce_or(key_e, pick)[key_e]
                 st = dict(st, f_started=st["f_started"] | pick)
+                if use_slots:
+                    st = _acquire_slots(st, pick, bucket,
+                                        jnp.clip(src_e, 0), e_bytes, W)
             return st
 
         def edge_satisfied(st):
             aw_e, src_e, key_e = edge_views(st)
-            prod_done = st["t_done"][producer[e_obj]]
+            prod_done = st["t_done"][prod_task_e]
             local = prod_done & (src_e == aw_e)
             moved = key_reduce_or(key_e, st["f_done"])[key_e]
             return (aw_e >= 0) & (local | moved) & edge_valid
@@ -602,11 +812,13 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             if E == 0 or simple:
                 active = st["f_started"] & ~st["f_done"]
                 return jnp.where(active, bandwidth_, 0.0)
+            caps = jnp.full(W, bandwidth_, jnp.float32)
+            if use_slots:
+                occ = st["slot_edge"] >= 0
+                return wf(st["slot_src"], slot_dst, occ, caps)
             aw_e, src_e, _ = edge_views(st)
             active = st["f_started"] & ~st["f_done"]
-            caps = jnp.full(W, bandwidth_, jnp.float32)
-            return waterfill(jnp.clip(src_e, 0), jnp.clip(aw_e, 0), active,
-                             caps, caps)
+            return wf(jnp.clip(src_e, 0), jnp.clip(aw_e, 0), active, caps)
 
         # -------------------------------------------------------- body
         def body(st):
@@ -619,10 +831,14 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             rates = rates_of(st)
             running = st["t_started"] & ~st["t_done"]
             t_next = jnp.min(jnp.where(running, st["t_finish"], jnp.inf))
-            active = st["f_started"] & ~st["f_done"]
             gran = st["now"] * 6e-7 + TIME_EPS
-            f_eta = jnp.where(active & (rates > 0), st["f_rem"] / rates,
-                              jnp.inf)
+            if use_slots:
+                active = st["slot_edge"] >= 0
+                rem = st["slot_rem"]
+            else:
+                active = st["f_started"] & ~st["f_done"]
+                rem = st["f_rem"]
+            f_eta = jnp.where(active & (rates > 0), rem / rates, jnp.inf)
             f_eta = jnp.where(f_eta <= gran, 0.0, f_eta)
             f_next = st["now"] + jnp.min(f_eta, initial=jnp.inf)
             nxt = jnp.minimum(t_next, f_next)
@@ -635,16 +851,22 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             nxt = jnp.maximum(nxt, st["now"])          # never go back
             dt = jnp.where(jnp.isfinite(nxt), nxt - st["now"], 0.0)
             now = jnp.where(jnp.isfinite(nxt), nxt, st["now"])
-            f_rem = jnp.where(active, st["f_rem"] - rates * dt, st["f_rem"])
-            f_done = st["f_done"] | (active & (
-                (f_rem <= BYTES_EPS) | (f_rem <= rates * gran)))
+            rem = jnp.where(active, rem - rates * dt, rem)
+            done_now = active & ((rem <= BYTES_EPS) | (rem <= rates * gran))
             t_newly = running & (st["t_finish"] <= now + TIME_EPS)
             free = st["free"] + jnp.zeros(W, jnp.int32).at[
                 jnp.clip(st["aw"], 0)].add(jnp.where(t_newly, cpus, 0))
-            return dict(st, now=now, f_rem=f_rem, f_done=f_done,
-                        t_done=st["t_done"] | t_newly, free=free,
-                        events=st["events"] | jnp.any(t_newly),
-                        steps=st["steps"] + 1)
+            st = dict(st, now=now, t_done=st["t_done"] | t_newly, free=free,
+                      events=st["events"] | jnp.any(t_newly),
+                      steps=st["steps"] + 1)
+            if use_slots:
+                newly_done = (jnp.zeros(E, bool)
+                              .at[jnp.clip(st["slot_edge"], 0)].max(done_now))
+                return dict(st, slot_rem=rem,
+                            slot_edge=jnp.where(done_now, -1,
+                                                st["slot_edge"]),
+                            f_done=st["f_done"] | newly_done)
+            return dict(st, f_rem=rem, f_done=st["f_done"] | done_now)
 
         def cond(st):
             return (~jnp.all(st["t_done"])) & (st["steps"] < steps_cap)
@@ -654,7 +876,11 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
                                      st["t_finish"], 0.0))
         transferred = jnp.sum(jnp.where(st["f_done"], e_bytes, 0.0))
         ok = jnp.all(st["t_done"])
+        if use_slots:
+            ok = ok & ~st["overflow"]
         makespan = jnp.where(ok, makespan, jnp.nan)
+        if return_steps:
+            return makespan, transferred, ok, st["steps"]
         return makespan, transferred, ok
 
     return run
@@ -663,7 +889,7 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
 def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
                            scheduler: str = "blevel",
                            netmodel: str = "maxmin", flow_rounds: int = 4,
-                           max_steps: int = None):
+                           max_steps: int = None, **kwargs):
     """Legacy per-graph binding of ``make_bucket_dynamic_simulator``:
     returns ``run(est_durations, est_sizes, msd, decision_delay,
     bandwidth, seed) -> (makespan, transferred_bytes, ok)`` with ``spec``
@@ -674,7 +900,8 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
     _check_cpus_fit([spec], cores_v, "make_dynamic_simulator")
     bspec = as_bucketed(spec)
     brun = make_bucket_dynamic_simulator(n_workers, cores_v, scheduler,
-                                         netmodel, flow_rounds, max_steps)
+                                         netmodel, flow_rounds, max_steps,
+                                         **kwargs)
 
     def run(est_durations, est_sizes, msd=jnp.float32(0.0),
             decision_delay=jnp.float32(0.0),
@@ -749,8 +976,8 @@ class DynamicGridRunner:
 
 
 class BucketedGridRunner:
-    """One jit compilation for a whole *shape bucket* of graphs on one
-    (cluster, scheduler, netmodel).
+    """One jit compilation for a whole *shape bucket* of graphs on a
+    whole group of same-W clusters for one (scheduler, netmodel).
 
     ``entries`` is ``[(graph, spec), ...]`` (or ``{name: (graph,
     spec)}``); every member is padded to the common bucket shape
@@ -758,8 +985,14 @@ class BucketedGridRunner:
     axis, so ``__call__(points)`` executes the full [graphs x points]
     grid — estimates, msd, delay, bandwidth, seed — in a single device
     call compiled exactly once (the survey's one-compile-per-bucket
-    contract; measured by ``jit_trace_count``).  ``cores`` is a scalar
-    or per-worker list (heterogeneous cluster, e.g. ``1x8+4x2``).
+    contract; measured by ``jit_trace_count``).
+
+    ``cores`` is a scalar, a per-worker list (heterogeneous cluster,
+    e.g. ``1x8+4x2``), or a stacked ``[K, W]`` matrix of K same-W
+    cluster signatures (pad shorter clusters with zero-core workers):
+    the cores vector is a *traced argument* of the compiled program, so
+    the whole cluster group rides one compilation as an extra vmap axis
+    and results gain a leading ``K`` axis.
 
     When many runners sweep the same bucket (the survey's cluster x
     scheduler x netmodel fan-out), pass the prestacked ``batch``
@@ -779,9 +1012,20 @@ class BucketedGridRunner:
         self.specs = [s for _, s in entries]
         self.names = [g.name for g in self.graphs]
         self.scheduler = scheduler
-        cores_v = _resolve_cores(n_workers, cores)
-        _check_cpus_fit(self.specs, cores_v,
-                        f"BucketedGridRunner({scheduler!r})")
+        arr = np.asarray(cores)
+        if arr.ndim <= 1:
+            clusters = _resolve_cores(n_workers, cores)[None, :]
+            self._single_cluster = True
+        else:
+            clusters = arr.astype(np.int32)
+            self._single_cluster = False
+        if clusters.shape[-1] != n_workers:
+            raise ValueError(f"cores matrix is {clusters.shape[-1]} wide "
+                             f"but n_workers={n_workers}")
+        self.clusters = clusters
+        for k in range(clusters.shape[0]):
+            _check_cpus_fit(self.specs, clusters[k],
+                            f"BucketedGridRunner({scheduler!r})")
         self.shape = tuple(shape) if shape is not None \
             else bucket_shape(self.specs)
         if batch is not None:
@@ -794,12 +1038,16 @@ class BucketedGridRunner:
             self.bspec = stack_specs([pad_spec(s, self.shape)
                                       for s in self.specs])
         self.run = make_bucket_dynamic_simulator(
-            n_workers, cores_v, scheduler, netmodel, max_steps=max_steps)
+            n_workers, None, scheduler, netmodel, max_steps=max_steps,
+            max_cores=max(int(clusters.max()), 1))
         over_points = jax.vmap(self.run,
-                               in_axes=(None, 0, 0, 0, 0, 0, 0))
-        self._fn = jax.jit(jax.vmap(over_points,
-                                    in_axes=(0, 0, 0, None, None, None,
-                                             None)))
+                               in_axes=(None, 0, 0, 0, 0, 0, 0, None))
+        over_graphs = jax.vmap(over_points,
+                               in_axes=(0, 0, 0, None, None, None, None,
+                                        None))
+        self._fn = jax.jit(jax.vmap(over_graphs,
+                                    in_axes=(None, None, None, None, None,
+                                             None, None, 0)))
         self._est = {} if est_cache is None else est_cache
 
     @property
@@ -822,7 +1070,8 @@ class BucketedGridRunner:
     def __call__(self, points):
         """Same point dicts as ``DynamicGridRunner``; returns
         ``(makespans f32[B, N], transferred f32[B, N])`` with the graph
-        axis in ``self.names`` order."""
+        axis in ``self.names`` order — with a leading cluster axis
+        (``f32[K, B, N]``) when built with a ``[K, W]`` cores matrix."""
         points, M, DD, BW, SD = _points_arrays(points)
         # [B, N, T] / [B, N, O]: per point the whole graph batch sees
         # that point's imode estimates
@@ -830,10 +1079,14 @@ class BucketedGridRunner:
                       for p in points], axis=1)
         S = np.stack([self._estimates(p.get("imode", "exact"))[1]
                       for p in points], axis=1)
-        ms, xfer, ok = self._fn(self.bspec, D, S, M, DD, BW, SD)
+        ms, xfer, ok = self._fn(self.bspec, D, S, M, DD, BW, SD,
+                                self.clusters)
         _check_ok(ok, f"BucketedGridRunner({self.names!r}, "
                       f"{self.scheduler!r})")
-        return np.asarray(ms), np.asarray(xfer)
+        ms, xfer = np.asarray(ms), np.asarray(xfer)
+        if self._single_cluster:
+            return ms[0], xfer[0]
+        return ms, xfer
 
 
 def simulate_dynamic_grid(graph, scheduler, n_workers, cores, points,

@@ -42,7 +42,7 @@ def waterfill(src, dst, active, caps_up, caps_down, max_rounds=None):
     cap0 = jnp.concatenate([caps_up, caps_down]).astype(jnp.float32)
 
     def body(state):
-        rates, frozen, cap_rem, _ = state
+        rates, frozen, cap_rem, _, rounds = state
         live = active & ~frozen
         livef = live.astype(jnp.float32)
         counts = (jnp.zeros(2 * W, jnp.float32).at[res_idx_u].add(livef)
@@ -57,17 +57,16 @@ def waterfill(src, dst, active, caps_up, caps_down, max_rounds=None):
                 .at[res_idx_d].add(freezef))
         cap_rem = jnp.maximum(cap_rem - min_share * used, 0.0)
         frozen = frozen | freeze
-        return rates, frozen, cap_rem, jnp.any(active & ~frozen)
-
-    def cond(state):
-        return state[3]
+        return rates, frozen, cap_rem, jnp.any(active & ~frozen), rounds + 1
 
     rates0 = jnp.zeros(F, jnp.float32)
     frozen0 = ~active
-    state = (rates0, frozen0, cap0, jnp.any(active))
-    # bounded while: every round freezes >=1 resource's flows
+    state = (rates0, frozen0, cap0, jnp.any(active), jnp.int32(0))
+    # bounded while: every round freezes >=1 resource's flows, and the
+    # round counter in the carry enforces ``max_rounds`` even if a
+    # pathological float tie fails to freeze anything
     state = jax.lax.while_loop(
-        lambda s: s[3], body, state)
+        lambda s: s[3] & (s[4] < max_rounds), body, state)
     return state[0]
 
 

@@ -47,8 +47,21 @@ def ssd(x, dt, A, B, C, D, *, use_pallas=False, blk_l=64):
 
 def waterfill(src, dst, active, caps_up, caps_down, *, use_pallas=False,
               rounds=None):
-    """Batched max-min fairness rates.  See ref.waterfill_ref."""
+    """Batched max-min fairness rates.  See ref.waterfill_ref.
+
+    Accepts ``[Bt, F]`` batches or a single ``[F]`` flow set — the
+    unbatched form is what the vectorized simulator calls from inside
+    its event loop (``core.vectorized.sim``): under an outer ``jax.vmap``
+    the Pallas kernel's batch grid dimension *is* the vmap axis, so a
+    whole batch of simulations becomes one kernel launch per event.
+    """
+    unbatched = src.ndim == 1
+    if unbatched:
+        src, dst, active, caps_up, caps_down = (
+            x[None] for x in (src, dst, active, caps_up, caps_down))
     if use_pallas:
-        return _waterfill_pallas(src, dst, active, caps_up, caps_down,
-                                 rounds=rounds, interpret=not _on_tpu())
-    return ref.waterfill_ref(src, dst, active, caps_up, caps_down)
+        out = _waterfill_pallas(src, dst, active, caps_up, caps_down,
+                                rounds=rounds, interpret=not _on_tpu())
+    else:
+        out = ref.waterfill_ref(src, dst, active, caps_up, caps_down)
+    return out[0] if unbatched else out

@@ -7,6 +7,14 @@ per-resource flow counts and per-flow freezes become dense matmuls; the
 progressive-filling rounds run in a ``fori_loop`` with everything resident
 in VMEM.  The batch dimension is the Pallas grid — thousands of concurrent
 simulations (GA populations, bandwidth sweeps) fill the TPU.
+
+The vectorized simulator routes here through ``kernels.ops.waterfill``
+(``waterfill_impl="pallas"``, the TPU default): each simulator event
+calls the kernel on its compact flow-slot pool (``[S]``, Bt=1) and the
+outer ``jax.vmap`` over simulations lifts the grid to the whole batch
+via the ``pallas_call`` batching rule.  The fixed ``rounds`` fori_loop
+is a no-op once every flow froze, so results match the early-exiting
+jnp progressive filling (``core.vectorized.waterfill``) bit-for-bit.
 """
 from __future__ import annotations
 

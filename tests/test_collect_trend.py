@@ -1,0 +1,66 @@
+"""Trend-collection wrapper plumbing (benchmarks/collect_trend.py)
+without touching the network: labels, ordering, and skip-on-missing
+artifact behaviour with a stubbed downloader."""
+import csv
+import os
+
+from benchmarks.collect_trend import download_artifacts, run_label
+from benchmarks.trend import collect, write_trend
+
+AGREE_FIELDS = ("graph_name", "scheduler_name", "makespan_ratio",
+                "speedup", "total_compiles", "bucket_groups")
+
+
+def _fake_artifact(path, ratio, compiles):
+    os.makedirs(path, exist_ok=True)
+    rows = [dict(graph_name="g", scheduler_name="blevel",
+                 makespan_ratio=ratio, speedup=1.5, total_compiles="",
+                 bucket_groups=""),
+            dict(graph_name="__pergraph_path__", scheduler_name="blevel",
+                 makespan_ratio="", speedup=2.0, total_compiles=compiles,
+                 bucket_groups=compiles)]
+    with open(os.path.join(path, "survey_agreement.csv"), "w",
+              newline="") as f:
+        w = csv.DictWriter(f, fieldnames=AGREE_FIELDS)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def test_run_label_is_stable():
+    assert run_label({"databaseId": 9, "number": 41,
+                      "headSha": "abcdef0123456789"}) == "run-41-abcdef0"
+    assert run_label({"databaseId": 9, "headSha": ""}) == "run-9-"
+
+
+def test_download_artifacts_skips_missing(tmp_path):
+    runs = [{"databaseId": i, "number": i, "headSha": f"sha{i}" * 3}
+            for i in (1, 2, 3)]
+
+    def downloader(run_id, target):
+        if run_id == 2:
+            raise OSError("artifact expired")
+        _fake_artifact(target, ratio=1.0, compiles=8)
+
+    got = download_artifacts(runs, str(tmp_path), downloader=downloader)
+    assert [os.path.basename(p) for p in got] == [
+        run_label(runs[0]), run_label(runs[2])]
+    # second call hits the cache, downloads nothing new
+    calls = []
+    got2 = download_artifacts(runs, str(tmp_path),
+                              downloader=lambda r, t: calls.append(r))
+    assert got == got2 and calls == [2]
+
+
+def test_collected_artifacts_feed_trend(tmp_path):
+    a = tmp_path / "run-1-aaaaaaa"
+    b = tmp_path / "run-2-bbbbbbb"
+    _fake_artifact(str(a), ratio=1.0, compiles=16)
+    _fake_artifact(str(b), ratio=1.002, compiles=8)
+    rows, summaries = collect([str(a), str(b)])
+    assert [s["source"] for s in summaries] == [a.name, b.name]
+    assert summaries[1]["compiles"] == "8/8"
+    csv_path, md_path = write_trend(rows, summaries, str(tmp_path / "out"))
+    assert os.path.exists(csv_path)
+    with open(md_path) as f:
+        md = f.read()
+    assert a.name in md and b.name in md

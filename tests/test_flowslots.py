@@ -1,0 +1,159 @@
+"""Flow-slot pool vs the per-edge baseline (ISSUE 4 tentpole), and the
+traced-cores cluster axis.
+
+Contracts:
+
+* under the max-min model the bounded slot pool (``S = 4W``) is a pure
+  reformulation — makespans and transferred bytes match the PR-3
+  per-edge path *bit for bit* (same flow sets => bitwise-identical
+  waterfill rates, ETAs and integration steps), across schedulers,
+  netmodels and heterogeneous clusters;
+* the overflow flag never fires (the Appendix-A limits bound in-flight
+  flows by the pool size), so ``ok`` stays True on normal runs;
+* the per-worker cores vector is a traced argument: one jit compilation
+  serves a whole group of same-W clusters stacked on a vmap axis.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import MiB
+from repro.core.graphs import make_graph, random_graph
+from repro.core.imodes import encode_imode
+from repro.core.vectorized import (encode_graph, jit_trace_count,
+                                   make_dynamic_simulator, make_simulator,
+                                   BucketedGridRunner)
+
+import test_vectorized_dynamic as tvd
+
+
+def run_static_both(g, W, cores, seed, netmodel="maxmin", bw=100 * MiB):
+    import random
+    spec = encode_graph(g)
+    rng = random.Random(seed)
+    cores_l = [cores] * W if np.isscalar(cores) else list(cores)
+    a = np.asarray([rng.choice([w for w in range(W)
+                                if cores_l[w] >= int(c)])
+                    for c in spec.cpus], np.int32)
+    p = np.arange(spec.T, 0, -1).astype(np.float32)
+    out = {}
+    for flag in (False, True):
+        run = jax.jit(make_simulator(spec, W, cores, netmodel,
+                                     flow_slots=flag))
+        ms, xf, ok = run(a, p, bandwidth=np.float32(bw))
+        assert bool(ok), f"flow_slots={flag}"
+        out[flag] = (float(ms), float(xf))
+    return out
+
+
+@pytest.mark.parametrize("gname", ["crossv", "fork1", "splitters"])
+def test_static_slot_path_bitwise_vs_per_edge(gname):
+    g = make_graph(gname, seed=0)
+    out = run_static_both(g, 8, 4, seed=11)
+    assert out[True] == out[False]
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_static_slot_path_random_graphs_hetero(seed):
+    g = random_graph(seed, n_tasks=24)
+    out = run_static_both(g, 4, [4, 2, 2, 1], seed=seed + 31)
+    assert out[True] == out[False]
+
+
+@pytest.mark.parametrize("gname", list(tvd.GRAPHS))
+@pytest.mark.parametrize("sched", ["blevel", "etf", "greedy"])
+def test_dynamic_slot_path_bitwise_vs_per_edge(gname, sched):
+    """The dynamic event loop (MSD batching, decision delay, imodes,
+    late-pinned dedup keys) over both paths: bit-identical results."""
+    make, W, cores = tvd.GRAPHS[gname]
+    g = make()
+    spec = encode_graph(g)
+    points = [dict(msd=m, decision_delay=d, imode=im)
+              for m in (0.0, 0.1) for d in (0.0, 0.05)
+              for im in ("exact", "user")]
+    runs = {flag: jax.jit(make_dynamic_simulator(
+        spec, W, cores, sched, "maxmin", flow_slots=flag))
+        for flag in (False, True)}
+    for pt in points:
+        d, s = encode_imode(g, pt["imode"])
+        res = {}
+        for flag, run in runs.items():
+            ms, xf, ok = run(d, s, np.float32(pt["msd"]),
+                             np.float32(pt["decision_delay"]),
+                             np.float32(100 * MiB))
+            assert bool(ok), (pt, flag)
+            res[flag] = (float(ms), float(xf))
+        assert res[True] == res[False], pt
+
+
+def test_dynamic_slot_path_hetero_cluster():
+    g = tvd.mini_cpus()
+    spec = encode_graph(g)
+    d, s = encode_imode(g, "user")
+    res = {}
+    for flag in (False, True):
+        run = jax.jit(make_dynamic_simulator(spec, 5, [8, 2, 2, 2, 2],
+                                             "blevel", "maxmin",
+                                             flow_slots=flag))
+        ms, xf, ok = run(d, s)
+        assert bool(ok)
+        res[flag] = (float(ms), float(xf))
+    assert res[True] == res[False]
+
+
+def test_simple_netmodel_ignores_flow_slots_flag():
+    """The simple model has no slot limits, so both flag values use the
+    per-edge path and agree trivially — the flag must not break it."""
+    g = tvd.mini_merge()
+    out = run_static_both(g, 4, 2, seed=5, netmodel="simple")
+    assert out[True] == out[False]
+
+
+def test_overflow_flag_stays_clear_under_contention():
+    """merge_neighbours-style forced transfers saturate the download
+    slots; the pool must still never overflow (ok stays True — already
+    asserted inside run_static_both)."""
+    g = tvd.mini_merge(8)
+    out = run_static_both(g, 2, 2, seed=3, bw=8 * MiB)
+    assert out[True] == out[False]
+
+
+def test_one_compile_serves_two_same_w_clusters():
+    """The traced-cores acceptance: ``8x4`` and ``1x8+4x2`` (padded to
+    W=8 with zero-core workers) ride one BucketedGridRunner compilation
+    as a cluster vmap axis, and each lane reproduces the single-cluster
+    runs."""
+    from repro.core import parse_cluster
+
+    g1, g2 = tvd.mini_fork(), tvd.mini_merge()
+    hetero = parse_cluster("1x8+4x2") + [0, 0, 0]
+    clusters = np.asarray([[4] * 8, hetero], np.int32)
+    pts = [dict(imode=im, bandwidth=100 * MiB) for im in ("exact", "user")]
+    t0 = jit_trace_count()
+    runner = BucketedGridRunner([(g1, None), (g2, None)], "blevel", 8,
+                                clusters)
+    ms, xf = runner(pts)
+    assert jit_trace_count() - t0 == 1
+    assert ms.shape == (2, 2, 2)            # [clusters, graphs, points]
+    runner(pts)
+    assert jit_trace_count() - t0 == 1      # warm call: no retrace
+    for k, cores in enumerate(clusters):
+        single = BucketedGridRunner([(g1, None), (g2, None)], "blevel", 8,
+                                    list(cores))
+        ms1, xf1 = single(pts)
+        np.testing.assert_array_equal(ms[k], ms1)
+        np.testing.assert_array_equal(xf[k], xf1)
+
+
+def test_survey_cluster_groups_merge_same_w():
+    from benchmarks.survey import cluster_groups, w_bucket
+
+    assert w_bucket(1) == 1 and w_bucket(5) == 8 and w_bucket(8) == 8
+    assert w_bucket(9) == 16
+    groups = cluster_groups(("8x4", "16x4", "32x4", "1x8+4x2"))
+    assert [(wb, names) for wb, names, _ in groups] == [
+        (8, ["8x4", "1x8+4x2"]), (16, ["16x4"]), (32, ["32x4"])]
+    wb, _, cores2d = groups[0]
+    assert cores2d.shape == (2, 8)
+    assert cores2d[1].tolist() == [8, 2, 2, 2, 2, 0, 0, 0]

@@ -1,0 +1,141 @@
+"""Pallas waterfill kernel (interpret mode) vs the jnp progressive
+filling oracle, plus the ``max_rounds`` bound and the simulator routing
+(ISSUE 4 satellites): random flow sets across W in {1, 4, 16} including
+no-active-flows, single-source contention and equal-share tie rounds.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import waterfill as ops_waterfill
+from repro.core.vectorized.waterfill import waterfill as jnp_waterfill
+
+RNG = np.random.default_rng(7)
+
+
+def both(src, dst, active, caps):
+    """(pallas interpret, jnp oracle) rates for one unbatched flow set."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    active = jnp.asarray(active, bool)
+    caps = jnp.asarray(caps, jnp.float32)
+    got = ops_waterfill(src, dst, active, caps, caps, use_pallas=True)
+    want = jnp_waterfill(src, dst, active, caps, caps)
+    return np.asarray(got), np.asarray(want)
+
+
+@pytest.mark.parametrize("W", [1, 4, 16])
+@pytest.mark.parametrize("F", [1, 8, 64])
+def test_random_flow_sets_match_oracle(W, F):
+    for trial in range(3):
+        src = RNG.integers(0, W, F)
+        dst = RNG.integers(0, W, F)
+        active = RNG.random(F) < 0.6
+        caps = RNG.uniform(50, 150, W)
+        got, want = both(src, dst, active, caps)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3,
+                                   err_msg=f"W={W} F={F} trial={trial}")
+
+
+@pytest.mark.parametrize("W", [1, 4, 16])
+def test_no_active_flows_is_all_zero(W):
+    got, want = both(np.zeros(6, np.int32), np.zeros(6, np.int32),
+                     np.zeros(6, bool), np.full(W, 100.0))
+    assert not got.any() and not want.any()
+
+
+@pytest.mark.parametrize("W,F", [(4, 4), (16, 12)])
+def test_single_source_contention_splits_upload(W, F):
+    """All flows leave worker 0 for distinct destinations: the source
+    upload capacity is the bottleneck, split equally."""
+    src = np.zeros(F, np.int32)
+    dst = 1 + (np.arange(F) % (W - 1)).astype(np.int32)
+    got, want = both(src, dst, np.ones(F, bool), np.full(W, 90.0))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    per_dst = np.bincount(dst, minlength=W).max()
+    expect = min(90.0 / F, 90.0 / per_dst)
+    np.testing.assert_allclose(got, np.full(F, expect), rtol=1e-5)
+
+
+@pytest.mark.parametrize("W", [4, 16])
+def test_equal_share_tie_rounds(W):
+    """A fully symmetric ring (every worker uploads to its neighbour):
+    every resource attains the minimal share simultaneously, so one
+    filling round must freeze everything at caps — the tie case the
+    freeze-all-bottlenecks rule exists for."""
+    src = np.arange(W, dtype=np.int32)
+    dst = ((np.arange(W) + 1) % W).astype(np.int32)
+    got, want = both(src, dst, np.ones(W, bool), np.full(W, 64.0))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    np.testing.assert_allclose(got, np.full(W, 64.0), rtol=1e-5)
+
+
+def test_batched_and_unbatched_ops_agree():
+    Bt, F, W = 3, 10, 4
+    src = jnp.asarray(RNG.integers(0, W, (Bt, F)), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, W, (Bt, F)), jnp.int32)
+    active = jnp.asarray(RNG.random((Bt, F)) < 0.7)
+    caps = jnp.asarray(RNG.uniform(50, 150, (Bt, W)), jnp.float32)
+    batched = ops_waterfill(src, dst, active, caps, caps, use_pallas=True)
+    for b in range(Bt):
+        one = ops_waterfill(src[b], dst[b], active[b], caps[b], caps[b],
+                            use_pallas=True)
+        np.testing.assert_allclose(np.asarray(one), np.asarray(batched)[b],
+                                   rtol=1e-6)
+
+
+def test_vmap_lifts_kernel_grid():
+    """The simulator's calling convention: unbatched [F] flow sets under
+    an outer jax.vmap — the pallas_call batching rule must reproduce the
+    explicitly batched launch."""
+    B, F, W = 4, 12, 4
+    src = jnp.asarray(RNG.integers(0, W, (B, F)), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, W, (B, F)), jnp.int32)
+    active = jnp.asarray(RNG.random((B, F)) < 0.6)
+    caps = jnp.full((B, W), 100.0, jnp.float32)
+    fn = jax.jit(jax.vmap(
+        lambda s, d, a, c: ops_waterfill(s, d, a, c, c, use_pallas=True)))
+    got = fn(src, dst, active, caps)
+    want = jax.vmap(jnp_waterfill)(src, dst, active, caps, caps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_jnp_max_rounds_is_enforced():
+    """Satellite bugfix: the jnp waterfill's while_loop must respect
+    ``max_rounds`` (it used to compute and ignore it)."""
+    W, F = 4, 8
+    src = jnp.asarray(RNG.integers(0, W, F), jnp.int32)
+    dst = jnp.asarray(RNG.integers(0, W, F), jnp.int32)
+    active = jnp.ones(F, bool)
+    caps = jnp.full(W, 100.0, jnp.float32)
+    # zero rounds => nothing ever freezes => all rates stay 0
+    got0 = jnp_waterfill(src, dst, active, caps, caps, max_rounds=0)
+    assert not np.asarray(got0).any()
+    # the default 2W bound loses nothing vs a huge bound
+    got = jnp_waterfill(src, dst, active, caps, caps)
+    big = jnp_waterfill(src, dst, active, caps, caps, max_rounds=10_000)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(big))
+
+
+def test_simulator_routes_through_pallas_kernel():
+    """make_simulator(waterfill_impl='pallas') — the TPU routing, here in
+    interpret mode — must reproduce the jnp path bit-for-bit."""
+    import test_vectorized_dynamic as tvd
+    from repro.core import MiB
+    from repro.core.vectorized import encode_graph, make_simulator
+
+    g = tvd.mini_fork(2)
+    spec = encode_graph(g)
+    a = np.asarray([i % 3 for i in range(spec.T)], np.int32)
+    p = np.arange(spec.T, 0, -1).astype(np.float32)
+    bw = np.float32(100 * MiB)
+    out = {}
+    for impl in ("jnp", "pallas"):
+        run = jax.jit(make_simulator(spec, 3, 2, "maxmin",
+                                     waterfill_impl=impl))
+        ms, xf, ok = run(a, p, bandwidth=bw)
+        assert bool(ok), impl
+        out[impl] = (float(ms), float(xf))
+    assert out["jnp"] == out["pallas"]
