@@ -35,10 +35,21 @@ event loop running each scheduler's deterministic twin
 row comparing one bucket compilation against the PR-2 one-runner-per-
 graph path).
 
+The graph axis is a **dataset** (``--dataset``, DESIGN.md §6):
+``default`` keeps the per-family survey representatives under the
+tuned ``specs.T_EDGES`` bucket edges (so the mini grid's compile-count
+contract stays byte-stable), while any named ``repro.workloads``
+manifest — e.g. ``wfcommons-mini``, 3 recipe families x 2 scales —
+sweeps that manifest's instances under bucket edges *derived from the
+dataset itself* (``workloads.compute_bucket_edges``), closing the
+ROADMAP "adaptive bucket edges" item.
+
 CLI::
 
     PYTHONPATH=src python -m benchmarks.survey --mini   # CI bench-smoke
     PYTHONPATH=src python -m benchmarks.survey --full   # paper grid
+    PYTHONPATH=src python -m benchmarks.survey --mini \
+        --dataset wfcommons-mini --assert-compiles     # recipe smoke
 """
 from __future__ import annotations
 
@@ -53,25 +64,28 @@ from repro.core import MiB, parse_cluster
 from repro.core.graphs import encode_graph_batch, survey_names
 from repro.core.vectorized import (BucketedGridRunner, DynamicGridRunner,
                                    jit_trace_count)
+from repro.workloads import w_bucket
 
 from .common import geomean, time_reference_twin, write_csv
 
 SCHEMA = ("graph_name", "cluster_name", "bandwidth", "netmodel",
           "scheduler_name", "imode", "min_sched_interval", "time",
-          "total_transfer")
+          "total_transfer", "dataset")
 
 AGREE_SCHEMA = ("graph_name", "scheduler_name", "cluster_name", "netmodel",
                 "bucket", "group_size", "compile_count", "makespan_ratio",
                 "vec_us_per_sim", "ref_us_per_sim", "speedup",
                 "bucket_cold_s", "pergraph_cold_s", "total_compiles",
-                "bucket_groups")
+                "bucket_groups", "dataset")
 
 OUT_DIR = os.environ.get("SURVEY_OUT", "results")
 
-# CI-sized: 1 graph per family (all three representatives share the T160
-# shape bucket, so every (cluster, scheduler, netmodel) combination is
-# exactly one compilation), 2 clusters incl. one heterogeneous
+# CI-sized: 1 graph per family (all four representatives — incl. the
+# recipes family's montage-77-s0 — share the T160 shape bucket, so
+# every (cluster, scheduler, netmodel) combination is exactly one
+# compilation), 2 clusters incl. one heterogeneous
 MINI_GRID = dict(
+    dataset="default",
     graphs_per_family=1,
     clusters=("8x4", "1x8+4x2"),
     bandwidths_mib=(32, 256),
@@ -82,6 +96,7 @@ MINI_GRID = dict(
 )
 
 FULL_GRID = dict(
+    dataset="default",
     graphs_per_family=3,
     clusters=("8x4", "16x4", "32x4", "1x8+4x2"),
     bandwidths_mib=(32, 128, 512, 2048),
@@ -103,15 +118,24 @@ def grid_points(grid):
             for m in grid["msds"]]
 
 
-def w_bucket(n_workers: int) -> int:
-    """Padded worker-count bucket: the next power of two >= n_workers.
-    Same-bucket clusters pad to one W (zero-core filler workers are
-    inert) and share one compiled program per (bucket, scheduler,
-    netmodel) — the traced-cores contract (DESIGN.md §3)."""
-    w = 1
-    while w < n_workers:
-        w *= 2
-    return w
+def dataset_axis(grid):
+    """The grid's graph axis: ``(dataset_name, graph_items, t_edges)``.
+    The ``default`` dataset is the classic per-family representative
+    slice under the tuned ``specs.T_EDGES`` (``t_edges=None``); named
+    manifests are built *once*, their bucket edges derived from the
+    built graphs (DESIGN.md §6), and the prebuilt ``(name, graph)``
+    pairs handed to ``encode_graph_batch`` so nothing is generated or
+    parsed twice."""
+    ds = grid.get("dataset", "default")
+    if ds == "default":
+        return ds, survey_names(grid["graphs_per_family"]), None
+    from repro.workloads import (build_dataset, compute_bucket_edges,
+                                 get_manifest)
+
+    man = get_manifest(ds)
+    graphs = build_dataset(man)
+    return ds, list(graphs.items()), compute_bucket_edges(
+        graphs, k=man.bucket_k)
 
 
 def cluster_groups(cluster_names):
@@ -133,7 +157,8 @@ def cluster_groups(cluster_names):
     return out
 
 
-def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer):
+def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer,
+               dataset="default"):
     """Map one graph's batched results onto the estee CSV schema."""
     rows = []
     for p, m, x in zip(points, ms, xfer):
@@ -147,6 +172,7 @@ def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer):
             "min_sched_interval": p["msd"],
             "time": float(m),
             "total_transfer": float(x),
+            "dataset": dataset,
         })
     return rows
 
@@ -184,6 +210,7 @@ def agreement_pass(grid, points, encoded, groups, runners, stats):
                     "vec_us_per_sim": vec_us,
                     "ref_us_per_sim": ref_us,
                     "speedup": ref_us / vec_us,
+                    "dataset": stats["dataset"],
                 })
     # the compile-amortisation row: B per-graph runners (each pays its
     # own jit trace) vs the one bucketed compilation recorded cold
@@ -207,6 +234,7 @@ def agreement_pass(grid, points, encoded, groups, runners, stats):
         "speedup": pergraph_cold / bucket_cold,
         "total_compiles": stats["compiles"],
         "bucket_groups": stats["bucket_groups"],
+        "dataset": stats["dataset"],
     })
     return agree_rows
 
@@ -217,8 +245,9 @@ def survey(grid, out_dir=OUT_DIR, agreement=True):
     ``stats`` carries the measured jit compile count vs the expected
     one-per-(bucket, cluster, scheduler, netmodel) group count."""
     points = grid_points(grid)
-    names = survey_names(grid["graphs_per_family"])
-    encoded, groups = encode_graph_batch(names, seed=0, bucket=True)
+    dataset, names, t_edges = dataset_axis(grid)
+    encoded, groups = encode_graph_batch(names, seed=0, bucket=True,
+                                         t_edges=t_edges)
     wgroups = cluster_groups(grid["clusters"])
     rows = []
     runners = {}                 # only the agreement slice is retained
@@ -244,13 +273,16 @@ def survey(grid, out_dir=OUT_DIR, agreement=True):
                         for b, gname in enumerate(grp.names):
                             rows.extend(estee_rows(gname, cname, netmodel,
                                                    sched, points, ms[k, b],
-                                                   xfer[k, b]))
+                                                   xfer[k, b],
+                                                   dataset=dataset))
     stats = dict(
         compiles=jit_trace_count() - trace0,
         bucket_groups=(len(wgroups) * len(grid["schedulers"])
                        * len(grid["netmodels"]) * len(groups)),
         buckets=[f"{grp.label}:{','.join(grp.names)}" for grp in groups],
         cluster_groups=[f"W{wb}:{','.join(cn)}" for wb, cn, _ in wgroups],
+        dataset=dataset,
+        t_edges=("T_EDGES" if t_edges is None else tuple(t_edges)),
     )
     agree_rows = (agreement_pass(grid, points, encoded, groups, runners,
                                  stats)
@@ -280,6 +312,7 @@ def report(rows, agree_rows, stats):
     print(f"survey/bucket_groups,0,{stats['bucket_groups']}")
     print(f"survey/cluster_groups,0,{len(stats['cluster_groups'])}")
     print(f"survey/rows,0,{len(rows)}")
+    print(f"# dataset {stats['dataset']}: t_edges={stats['t_edges']}")
 
 
 def check_compiles(stats):
@@ -309,6 +342,12 @@ def main():
                       help="CI-sized grid (default)")
     mode.add_argument("--full", action="store_true",
                       help="paper-scale grid (slow)")
+    ap.add_argument("--dataset", default="default",
+                    help="graph-axis dataset: 'default' (per-family "
+                         "survey representatives, tuned T_EDGES) or a "
+                         "repro.workloads manifest name (e.g. "
+                         "'wfcommons-mini') with bucket edges derived "
+                         "from the dataset")
     ap.add_argument("--out", default=OUT_DIR,
                     help=f"output directory (default {OUT_DIR!r})")
     ap.add_argument("--no-agreement", action="store_true",
@@ -317,12 +356,14 @@ def main():
                     help="fail unless the jit compile count equals the "
                          "bucket-group count (CI regression gate)")
     args = ap.parse_args()
-    grid = FULL_GRID if args.full else MINI_GRID
+    grid = dict(FULL_GRID if args.full else MINI_GRID,
+                dataset=args.dataset)
     t0 = time.time()
     rows, agree_rows, stats = survey(grid, out_dir=args.out,
                                      agreement=not args.no_agreement)
     report(rows, agree_rows, stats)
-    print(f"# survey: {len(rows)} grid points, {stats['compiles']} jit "
+    print(f"# survey[{stats['dataset']}]: {len(rows)} grid points, "
+          f"{stats['compiles']} jit "
           f"compiles for {stats['bucket_groups']} (bucket, W, scheduler, "
           f"netmodel) groups ({'; '.join(stats['buckets'])}; "
           f"{'; '.join(stats['cluster_groups'])}) in {time.time() - t0:.1f}s "

@@ -100,6 +100,14 @@ class TaskGraph:
             self._add_input(t, o)
         return t
 
+    def new_object(self, task: Task, size: float) -> DataObject:
+        """Append one output object to an existing task (loaders use
+        this for e.g. zero-size control-dependency objects)."""
+        o = DataObject(id=len(self.objects), size=float(size), parent=task)
+        self.objects.append(o)
+        task.outputs.append(o)
+        return o
+
     def _add_input(self, t: Task, o: DataObject):
         assert o.parent is not t, "task cannot consume its own output"
         t.inputs.append(o)

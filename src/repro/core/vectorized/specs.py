@@ -204,20 +204,34 @@ def round_up(n: int, multiple: int = PAD_MULTIPLE) -> int:
     return 0 if n == 0 else ((n + multiple - 1) // multiple) * multiple
 
 
-def t_bucket(T: int, t_edges=T_EDGES) -> int:
-    """Bucket edge for a task count: smallest configured edge >= T, or
-    the next multiple of the last edge beyond it."""
+def t_bucket(T: int, t_edges=T_EDGES, overflow: str = "derive") -> int:
+    """Bucket edge for a task count: the smallest configured edge >= T.
+    Beyond the last edge the ``overflow`` policy decides (ISSUE 5
+    satellite — previously silent): ``"derive"`` (default) grows an
+    extra bucket at the next multiple of the last edge; ``"error"``
+    raises, for callers whose edges are supposed to cover the dataset
+    (``workloads.compute_bucket_edges`` guarantees that for the dataset
+    it was derived from)."""
+    if overflow not in ("derive", "error"):
+        raise ValueError(f"unknown overflow policy {overflow!r} "
+                         f"(have 'derive', 'error')")
     for e in t_edges:
         if T <= e:
             return e
+    if overflow == "error":
+        raise ValueError(
+            f"task count {T} exceeds the largest bucket edge "
+            f"{t_edges[-1]} (t_edges={tuple(t_edges)}); pass edges "
+            f"covering the dataset — e.g. workloads.compute_bucket_edges"
+            f" — or overflow='derive'")
     return round_up(T, t_edges[-1])
 
 
-def bucket_shape(specs, t_edges=T_EDGES):
+def bucket_shape(specs, t_edges=T_EDGES, overflow: str = "derive"):
     """Common padded shape for a set of specs sharing one T bucket:
     (T bucket edge, max O rounded up, max E rounded up)."""
     specs = list(specs)
-    edges = {t_bucket(s.T, t_edges) for s in specs}
+    edges = {t_bucket(s.T, t_edges, overflow) for s in specs}
     if len(edges) != 1:
         raise ValueError(f"specs span several T buckets {sorted(edges)}")
     return (edges.pop(),
@@ -240,20 +254,24 @@ class BucketGroup:
         return f"T{T}xO{O}xE{E}"
 
 
-def pad_specs(named_specs, t_edges=T_EDGES):
+def pad_specs(named_specs, t_edges=T_EDGES, overflow: str = "derive"):
     """The bucketing layer: group ``{name: GraphSpec}`` (or ``(name,
     spec)`` pairs) by T bucket, pad every member to its group's common
     shape and stack — returns ``[BucketGroup, ...]`` ordered by bucket
-    size.  One jit compilation serves each returned group."""
+    size.  One jit compilation serves each returned group.  ``t_edges``
+    is caller-suppliable (dataset-derived edges from
+    ``workloads.compute_bucket_edges``); ``overflow`` sets the
+    beyond-last-edge policy (see ``t_bucket``)."""
     items = (list(named_specs.items()) if isinstance(named_specs, dict)
              else list(named_specs))
     by_edge = {}
     for name, spec in items:
-        by_edge.setdefault(t_bucket(spec.T, t_edges), []).append((name, spec))
+        by_edge.setdefault(t_bucket(spec.T, t_edges, overflow),
+                           []).append((name, spec))
     groups = []
     for edge in sorted(by_edge):
         members = by_edge[edge]
-        shape = bucket_shape([s for _, s in members], t_edges)
+        shape = bucket_shape([s for _, s in members], t_edges, overflow)
         batch = stack_specs([pad_spec(s, shape) for _, s in members])
         groups.append(BucketGroup(shape=shape,
                                   names=tuple(n for n, _ in members),

@@ -10,9 +10,14 @@ from repro.core.schedulers.det import counter_choice
 
 
 def test_schema_matches_estee_frame():
+    """estee frame columns + the appended dataset column (trailing so
+    older consumers reading by position stay compatible; trend.py
+    tolerates it by construction)."""
     assert survey.SCHEMA == ("graph_name", "cluster_name", "bandwidth",
                              "netmodel", "scheduler_name", "imode",
-                             "min_sched_interval", "time", "total_transfer")
+                             "min_sched_interval", "time", "total_transfer",
+                             "dataset")
+    assert survey.AGREE_SCHEMA[-1] == "dataset"
 
 
 def test_grid_points_expansion():
@@ -88,6 +93,38 @@ def test_encode_graph_batch_builds_specs_once():
     batch = encode_graph_batch(["fastcrossv", "sipht"], seed=0)
     g, spec = batch["fastcrossv"]
     assert g.task_count == spec.T and g.object_count == spec.O
+
+
+def test_dataset_axis_default_vs_manifest():
+    """The --dataset axis: 'default' keeps the per-family reps under
+    the tuned T_EDGES; manifests derive their own bucket edges."""
+    from repro.core.vectorized.specs import T_EDGES
+    from repro.workloads import WFCOMMONS_MINI, compute_bucket_edges
+
+    ds, names, t_edges = survey.dataset_axis(survey.MINI_GRID)
+    assert (ds, t_edges) == ("default", None)
+    assert names == survey_names(survey.MINI_GRID["graphs_per_family"])
+
+    grid = dict(survey.MINI_GRID, dataset="wfcommons-mini")
+    ds, items, t_edges = survey.dataset_axis(grid)
+    assert ds == "wfcommons-mini"
+    # manifests come back prebuilt — (name, graph) pairs, built once
+    assert tuple(n for n, _ in items) == WFCOMMONS_MINI.instances
+    assert all(g.task_count > 0 for _, g in items)
+    assert t_edges == compute_bucket_edges(WFCOMMONS_MINI)
+    assert t_edges != T_EDGES and t_edges[-1] >= 204
+    # prebuilt pairs flow through encode_graph_batch unchanged
+    from repro.core.graphs import encode_graph_batch
+    enc = encode_graph_batch(items[:2], seed=0)
+    assert enc[items[0][0]][0] is items[0][1]
+
+
+def test_estee_rows_carry_dataset():
+    pts = survey.grid_points(survey.MINI_GRID)[:2]
+    rows = survey.estee_rows("montage-77-s0", "8x4", "maxmin", "etf", pts,
+                             np.zeros(2, np.float32), np.zeros(2, np.float32),
+                             dataset="wfcommons-mini")
+    assert all(r["dataset"] == "wfcommons-mini" for r in rows)
 
 
 def test_counter_hash_matches_vectorized_twin():

@@ -73,3 +73,32 @@ def test_collect_tolerates_missing_files(tmp_path):
     assert rows == []
     assert summaries[0]["survey_rows"] == 0
     assert summaries[0]["speedup_geomean"] == ""
+
+
+def test_collect_tolerates_dataset_column(tmp_path):
+    """Artifacts produced after the workloads subsystem carry a
+    ``dataset`` column in both survey frames; older artifacts don't —
+    the trend view must concatenate the two without loss."""
+    _write_artifact(str(tmp_path / "pr4"), [1.0, 2.0], [1.0, 1.0],
+                    with_bucket_cols=True)
+    new = str(tmp_path / "pr5")
+    os.makedirs(new)
+    with open(os.path.join(new, "survey_agreement.csv"), "w",
+              newline="") as f:
+        w = csv.DictWriter(f, fieldnames=["graph_name", "scheduler_name",
+                                          "makespan_ratio", "speedup",
+                                          "dataset"])
+        w.writeheader()
+        w.writerow({"graph_name": "montage-77-s0", "scheduler_name": "etf",
+                    "makespan_ratio": 1.0, "speedup": 3.0,
+                    "dataset": "wfcommons-mini"})
+    rows, summaries = trend.collect([str(tmp_path / "pr4"), new])
+    assert summaries[1]["speedup_geomean"] == 3.0
+    by_src = {r["source"]: r for r in rows}
+    assert by_src["pr5"]["dataset"] == "wfcommons-mini"
+    csv_path, _ = trend.write_trend(rows, summaries, str(tmp_path / "out"))
+    with open(csv_path, newline="") as f:
+        back = list(csv.DictReader(f))
+    # the merged frame keeps the new column, blank for old sources
+    assert back[0]["dataset"] == "" and back[-1]["dataset"] == \
+        "wfcommons-mini"

@@ -1,0 +1,167 @@
+"""WfFormat ingestion/export (repro.workloads.wfformat): golden-fixture
+round-trip idempotence, machine normalization, control edges, and
+reference-vs-vectorized agreement for imported graphs."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import MiB, Simulator, Worker
+from repro.core.graphs import make_graph
+from repro.core.schedulers.fixed import FixedScheduler
+from repro.core.vectorized import encode_graph, make_simulator
+from repro.workloads import dump_wfformat, load_wfformat, save_wfformat
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "wfformat_golden.json")
+
+
+def graph_signature(g):
+    """Order-independent structural fingerprint: per task (category,
+    duration, cpus, sorted output sizes, sorted input keys)."""
+    def tkey(t):
+        return (t.name, round(t.duration, 9), t.cpus,
+                tuple(sorted(round(o.size, 6) for o in t.outputs)))
+    sig = []
+    for t in g.tasks:
+        ins = tuple(sorted((tkey(o.parent), round(o.size, 6))
+                           for o in t.inputs))
+        sig.append((tkey(t), ins))
+    return sorted(sig)
+
+
+def test_golden_import():
+    g = load_wfformat(GOLDEN)
+    g.validate()
+    assert g.name == "golden-mini"
+    assert g.task_count == 7
+    # 7 produced files + 1 zero-size control edge (mConcat -> mBgModel)
+    assert g.object_count == 8
+    assert sum(1 for o in g.objects if o.size == 0.0) == 1
+    # the external staged-in input is dropped, once per consumer
+    assert g.wf_external_inputs == 2
+    cats = {t.name for t in g.tasks}
+    assert cats == {"mProject", "mDiff", "mConcat", "mBgModel", "mAdd"}
+    assert max(t.cpus for t in g.tasks) == 4
+
+
+def test_machine_normalization():
+    g = load_wfformat(GOLDEN)
+    by_cat = {}
+    for t in g.tasks:
+        by_cat.setdefault(t.name, []).append(t)
+    # slow machine (1200 MHz) runtimes rescale onto the 2400 MHz ref
+    assert sorted(t.duration for t in by_cat["mProject"]) == [6.0, 10.0]
+    assert sorted(t.duration for t in by_cat["mDiff"]) == [3.0, 5.0]
+    # tasks without a machine keep their measured runtime
+    assert by_cat["mConcat"][0].duration == 8.0
+    raw = load_wfformat(GOLDEN, normalize_machines=False)
+    assert sorted(t.duration for t in raw.tasks)[-1] == 30.0
+    assert sum(t.duration for t in raw.tasks) == 91.0
+
+
+def test_roundtrip_idempotent(tmp_path):
+    g1 = load_wfformat(GOLDEN)
+    path = str(tmp_path / "roundtrip.json")
+    save_wfformat(g1, path)
+    g2 = load_wfformat(path)
+    assert graph_signature(g1) == graph_signature(g2)
+    # a second full cycle is byte-stable, not just structure-stable
+    d2 = dump_wfformat(g2)
+    g3 = load_wfformat(json.dumps(d2))
+    assert dump_wfformat(g3) == d2
+    # user-imode annotations are regenerated deterministically
+    assert ([t.expected_duration for t in g1.tasks]
+            == [t.expected_duration for t in g2.tasks])
+
+
+def test_v15_specification_layout():
+    """The split specification/execution layout parses to the same
+    graph as the flat one."""
+    flat = load_wfformat(GOLDEN)
+    with open(GOLDEN) as f:
+        data = json.load(f)
+    tasks, efiles, etasks = [], [], []
+    for t in data["workflow"]["tasks"]:
+        ins = [f["name"] for f in t["files"] if f["link"] == "input"]
+        outs = [f["name"] for f in t["files"] if f["link"] == "output"]
+        efiles += [{"id": f["name"], "sizeInBytes": f["sizeInBytes"]}
+                   for f in t["files"]]
+        tasks.append({"id": t["name"], "parents": t["parents"],
+                      "inputFiles": ins, "outputFiles": outs})
+        etasks.append({"id": t["name"],
+                       "runtimeInSeconds": t["runtimeInSeconds"],
+                       "coreCount": t["cores"],
+                       "machines": ([t["machine"]] if "machine" in t
+                                    else [])})
+    v15 = {"name": "golden-mini", "schemaVersion": "1.5",
+           "workflow": {
+               "specification": {"tasks": tasks, "files": efiles},
+               "execution": {"tasks": etasks,
+                             "machines": data["workflow"]["machines"]}}}
+    g = load_wfformat(v15)
+    assert graph_signature(g) == graph_signature(flat)
+
+
+def test_loader_rejects_broken_instances():
+    with pytest.raises(ValueError, match="no tasks"):
+        load_wfformat({"workflow": {"tasks": []}})
+    dup = {"workflow": {"tasks": [
+        {"name": "a_1", "runtimeInSeconds": 1.0,
+         "files": [{"name": "x.dat", "link": "output", "sizeInBytes": 1}]},
+        {"name": "a_2", "runtimeInSeconds": 1.0,
+         "files": [{"name": "x.dat", "link": "output", "sizeInBytes": 1}]},
+    ]}}
+    with pytest.raises(ValueError, match="produced by both"):
+        load_wfformat(dup)
+    cyc = {"workflow": {"tasks": [
+        {"name": "a_1", "runtimeInSeconds": 1.0, "parents": ["b_2"]},
+        {"name": "b_2", "runtimeInSeconds": 1.0, "parents": ["a_1"]},
+    ]}}
+    with pytest.raises(ValueError, match="cycle"):
+        load_wfformat(cyc)
+    selfloop = {"workflow": {"tasks": [
+        {"name": "a_1", "runtimeInSeconds": 1.0, "files": [
+            {"name": "x.dat", "link": "output", "sizeInBytes": 1},
+            {"name": "x.dat", "link": "input", "sizeInBytes": 1},
+        ]},
+    ]}}
+    with pytest.raises(ValueError, match="its own output"):
+        load_wfformat(selfloop)
+
+
+def test_make_graph_wf_prefix():
+    g = make_graph(f"wf:{GOLDEN}")
+    assert g.task_count == 7
+    assert all(t.expected_duration is not None for t in g.tasks)
+    # seed leaves the trace data fixed and only moves the user-imode
+    # estimate sampling
+    g2 = make_graph(f"wf:{GOLDEN}", seed=5)
+    assert [t.duration for t in g2.tasks] == [t.duration for t in g.tasks]
+    assert ([t.expected_duration for t in g2.tasks]
+            != [t.expected_duration for t in g.tasks])
+
+
+@pytest.mark.parametrize("netmodel", ["simple", "maxmin"])
+def test_imported_graph_ref_vs_vectorized(netmodel):
+    """Imported instances run consistently through both simulators —
+    the ISSUE-5 round-trip acceptance for the simulation layer."""
+    import jax
+    import random
+
+    g = load_wfformat(GOLDEN)
+    W, cores, bw = 3, 4, 50 * MiB
+    rng = random.Random(7)
+    assign = {t: rng.randrange(W) for t in g.tasks}
+    prios = {t: float(g.task_count - i) for i, t in enumerate(g.tasks)}
+    rep = Simulator(g, [Worker(i, cores) for i in range(W)],
+                    FixedScheduler(dict(assign), prios), netmodel=netmodel,
+                    bandwidth=bw, msd=0.0).run()
+    run = jax.jit(make_simulator(encode_graph(g), W, cores, netmodel))
+    a = np.array([assign[t] for t in g.tasks], np.int32)
+    p = np.array([prios[t] for t in g.tasks], np.float32)
+    ms, xfer, ok = run(a, p, bandwidth=bw)
+    assert bool(ok)
+    assert float(ms) == pytest.approx(rep.makespan, rel=2e-3)
+    assert float(xfer) == pytest.approx(rep.transferred_bytes, rel=1e-3)
