@@ -33,7 +33,7 @@ def run(fast=True):
             reps, ref_us = time_reference_twin(g, s, workers, cores,
                                                ref_pts)
             speed.append((g, s, vec_us, ref_us))
-            for p, rep in zip(ref_pts, reps):
+            for p, rep in zip(ref_pts, reps, strict=True):
                 vec = next(r for r in vrows if r["imode"] == p["imode"])
                 print(f"imode/agree_{g}/{s}/{p['imode']},{ref_us:.0f},"
                       f"{vec['makespan'] / rep.makespan:.4f}")

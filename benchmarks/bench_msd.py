@@ -32,7 +32,7 @@ def run(fast=True):
             reps, ref_us = time_reference_twin(g, s, workers, cores,
                                                ref_pts)
             speed.append((g, s, vec_us, ref_us))
-            for p, rep in zip(ref_pts, reps):
+            for p, rep in zip(ref_pts, reps, strict=True):
                 vec = next(r for r in vrows if r["msd"] == p["msd"])
                 print(f"msd/agree_{g}/{s}/msd{p['msd']},{ref_us:.0f},"
                       f"{vec['makespan'] / rep.makespan:.4f}")

@@ -74,7 +74,7 @@ def sweep_vectorized(graph_name, scheduler, workers, cores, points,
     wall = time.perf_counter() - t0
     us_per_sim = wall / len(points) * 1e6
     rows = []
-    for p, m, x in zip(points, ms, xfer):
+    for p, m, x in zip(points, ms, xfer, strict=True):
         rows.append({
             "graph": graph_name, "scheduler": scheduler,
             "workers": workers, "cores": cores,

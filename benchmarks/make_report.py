@@ -87,7 +87,7 @@ def dryrun_table(recs):
 
 
 def roofline_table(recs):
-    print("| arch | shape | compute | memory (HLO⌃ / floor⌄) | collective |"
+    print("| arch | shape | compute | memory (HLO^ / floor_) | collective |"
           " dominant | MODEL/HLO flops | next lever |")
     print("|---|---|---|---|---|---|---|---|")
     for arch in ARCH_NAMES:

@@ -63,7 +63,7 @@ import numpy as np
 from repro.core import MiB, parse_cluster
 from repro.core.graphs import encode_graph_batch, survey_names
 from repro.core.vectorized import (BucketedGridRunner, DynamicGridRunner,
-                                   jit_trace_count)
+                                   trace_counter)
 from repro.workloads import w_bucket
 
 from .common import geomean, time_reference_twin, write_csv
@@ -161,7 +161,7 @@ def estee_rows(gname, cname, netmodel, scheduler, points, ms, xfer,
                dataset="default"):
     """Map one graph's batched results onto the estee CSV schema."""
     rows = []
-    for p, m, x in zip(points, ms, xfer):
+    for p, m, x in zip(points, ms, xfer, strict=True):
         rows.append({
             "graph_name": gname,
             "cluster_name": cname,
@@ -239,6 +239,50 @@ def agreement_pass(grid, points, encoded, groups, runners, stats):
     return agree_rows
 
 
+def _make_diagnose(runners, grid):
+    """A lazy closure over the first retained runner that re-traces its
+    un-vmapped simulator for graph 0 vs graph 1 (and cluster row 0 vs
+    row 1) and structurally diffs the jaxprs — ``repro.analysis
+    .diff_traces``.  Called only when ``check_compiles`` is about to
+    fail, so the AssertionError can *name* the first divergent equation
+    (or blame the Python side when the traces are identical)."""
+    key = (grid["schedulers"][0], grid["netmodels"][0], 0)
+    if key not in runners:
+        return None
+    runner, _, _ = runners[key]
+
+    def diagnose():
+        import jax
+        import jax.numpy as jnp
+
+        from repro.analysis import diff_traces
+
+        take = lambda b: jax.tree_util.tree_map(  # noqa: E731
+            lambda x: x[b], runner.bspec)
+        D, S = runner._estimates("exact")
+
+        def args(b, k):
+            return (take(b), jnp.asarray(D[b]), jnp.asarray(S[b]),
+                    jnp.float32(0.0), jnp.float32(0.0),
+                    jnp.float32(32 * MiB), jnp.int32(0),
+                    jnp.asarray(runner.clusters[k]))
+
+        parts = []
+        if runner.B > 1:
+            parts.append("graph axis (bucket member 0 vs 1):\n"
+                         + diff_traces(runner.run, args(0, 0), args(1, 0),
+                                       labels=(runner.names[0],
+                                               runner.names[1])))
+        if runner.clusters.shape[0] > 1:
+            parts.append("cluster axis (row 0 vs 1):\n"
+                         + diff_traces(runner.run, args(0, 0), args(0, 1),
+                                       labels=("cluster0", "cluster1")))
+        return "\n".join(parts) if parts else \
+            "single-graph, single-cluster group: nothing to diff"
+
+    return diagnose
+
+
 def survey(grid, out_dir=OUT_DIR, agreement=True):
     """Run the whole grid; returns (rows, agreement_rows, stats) and
     writes ``survey.csv`` / ``survey_agreement.csv`` under ``out_dir``.
@@ -252,31 +296,30 @@ def survey(grid, out_dir=OUT_DIR, agreement=True):
     rows = []
     runners = {}                 # only the agreement slice is retained
     est_caches = [{} for _ in groups]    # shared per bucket, not per runner
-    trace0 = jit_trace_count()
-    for wb, cnames, cores2d in wgroups:
-        for sched in grid["schedulers"]:
-            for netmodel in grid["netmodels"]:
-                for gi, grp in enumerate(groups):
-                    runner = BucketedGridRunner(
-                        [encoded[n] for n in grp.names], sched,
-                        wb, cores2d, netmodel=netmodel,
-                        shape=grp.shape, batch=grp.batch,
-                        est_cache=est_caches[gi])
-                    t0 = time.perf_counter()
-                    ms, xfer = runner(points)    # compile + run [K, B, N]
-                    cold_s = time.perf_counter() - t0
-                    if (wb == wgroups[0][0]
-                            and netmodel == grid["netmodels"][0]):
-                        runners[(sched, netmodel, gi)] = (runner, cold_s,
-                                                          cnames)
-                    for k, cname in enumerate(cnames):
-                        for b, gname in enumerate(grp.names):
-                            rows.extend(estee_rows(gname, cname, netmodel,
-                                                   sched, points, ms[k, b],
-                                                   xfer[k, b],
-                                                   dataset=dataset))
+    with trace_counter() as tc:          # scoped: no cross-sweep bleed
+        for wb, cnames, cores2d in wgroups:
+            for sched in grid["schedulers"]:
+                for netmodel in grid["netmodels"]:
+                    for gi, grp in enumerate(groups):
+                        runner = BucketedGridRunner(
+                            [encoded[n] for n in grp.names], sched,
+                            wb, cores2d, netmodel=netmodel,
+                            shape=grp.shape, batch=grp.batch,
+                            est_cache=est_caches[gi])
+                        t0 = time.perf_counter()
+                        ms, xfer = runner(points)  # compile+run [K, B, N]
+                        cold_s = time.perf_counter() - t0
+                        if (wb == wgroups[0][0]
+                                and netmodel == grid["netmodels"][0]):
+                            runners[(sched, netmodel, gi)] = (runner, cold_s,
+                                                              cnames)
+                        for k, cname in enumerate(cnames):
+                            for b, gname in enumerate(grp.names):
+                                rows.extend(estee_rows(
+                                    gname, cname, netmodel, sched, points,
+                                    ms[k, b], xfer[k, b], dataset=dataset))
     stats = dict(
-        compiles=jit_trace_count() - trace0,
+        compiles=tc.count,
         bucket_groups=(len(wgroups) * len(grid["schedulers"])
                        * len(grid["netmodels"]) * len(groups)),
         buckets=[f"{grp.label}:{','.join(grp.names)}" for grp in groups],
@@ -284,6 +327,7 @@ def survey(grid, out_dir=OUT_DIR, agreement=True):
         dataset=dataset,
         t_edges=("T_EDGES" if t_edges is None else tuple(t_edges)),
     )
+    stats["diagnose"] = _make_diagnose(runners, grid)
     agree_rows = (agreement_pass(grid, points, encoded, groups, runners,
                                  stats)
                   if agreement else [])
@@ -320,12 +364,20 @@ def check_compiles(stats):
     contract (ISSUE 3/4 acceptance; asserted by CI so a per-graph or
     per-cluster recompile regression fails the build)."""
     if stats["compiles"] != stats["bucket_groups"]:
-        raise AssertionError(
+        msg = (
             f"jit compile count {stats['compiles']} != bucket-group count "
             f"{stats['bucket_groups']} — the bucketed survey is "
             f"recompiling per graph or per cluster (buckets: "
             f"{stats['buckets']}; clusters: "
             f"{stats.get('cluster_groups', [])})")
+        diagnose = stats.get("diagnose")
+        if diagnose is not None:
+            try:
+                msg += "\nrecompile diagnosis (repro.analysis):\n" \
+                       + diagnose()
+            except Exception as e:  # diagnosis must never mask the gate
+                msg += f"\n(recompile diagnosis itself failed: {e!r})"
+        raise AssertionError(msg)
 
 
 def run(fast=True):

@@ -1,0 +1,31 @@
+"""repro.analysis — "simlint": static analysis for the vectorized
+simulator (DESIGN.md §7).
+
+Three layers, one CLI (``python -m repro.analysis``):
+
+* ``jaxpr_checks`` (JX1xx) — abstract-trace every registered simulator
+  / scheduler factory over the survey grid and verify compiled-program
+  invariants: carry stability, no weak types in carries, no float64,
+  traced-argument liveness, flow-slot pool bounds.
+* ``recompile_diff`` — structural jaxpr differ that explains
+  ``--assert-compiles`` count mismatches (first divergent equation, or
+  "identical programs: look at the Python cache key").
+* ``ast_rules`` (PY2xx) — source lint over ``core/vectorized/``,
+  ``kernels/`` and ``workloads/`` for Python-level hazards in traced
+  code (tracer concretization, numpy constant-folding, untraceable
+  conditionals, double-NaN ``where``, unmasked padded reductions).
+
+Suppress individual findings with ``# simlint: disable=RULE`` comments
+(AST rules) — suppressed findings still appear in the JSON report.
+"""
+from .report import Finding, RULES, active, render_report, to_json
+from .ast_rules import check_paths, check_source, default_paths
+from .jaxpr_checks import Target, check_all, check_target, default_targets
+from .recompile_diff import Divergence, diff_jaxprs, diff_traces
+
+__all__ = [
+    "Finding", "RULES", "active", "render_report", "to_json",
+    "check_paths", "check_source", "default_paths",
+    "Target", "check_all", "check_target", "default_targets",
+    "Divergence", "diff_jaxprs", "diff_traces",
+]

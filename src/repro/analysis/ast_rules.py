@@ -1,0 +1,331 @@
+"""simlint PY2xx: ruff-style AST lint for Python-level hazards in traced
+code (DESIGN.md §7).
+
+"Traced code" is approximated statically as the union of
+
+* every function/lambda nested inside a ``make_*`` factory (the repo
+  convention: factories close over static config and return functions
+  that run under jit), and
+* every function passed by name (or as a lambda) to a
+  ``lax.while_loop`` / ``lax.fori_loop`` / ``lax.scan`` / ``lax.cond``
+  call.
+
+Rules (ids in ``report.RULES``):
+
+* PY201 — ``float(x)``/``int(x)``/``bool(x)`` on a non-literal in
+  traced code: concretizes a tracer, breaking jit/vmap.
+* PY202 — ``np.*`` call in traced code: silently constant-folds at
+  trace time (dtype constructors / ``iinfo`` / ``finfo`` are allowed —
+  those *are* trace-time constants by design).
+* PY203 — Python ``if``/``while`` whose test mentions a parameter of
+  the traced function: value-dependent control flow does not trace
+  (``is [not] None`` checks are static and exempt).
+* PY204 — ``jnp.where(cond, a/b, ...)`` where the denominator ``b``
+  also appears in ``cond`` and carries no ``jnp.maximum``/``clip``/
+  ``where`` guard of its own: the unselected lanes still evaluate
+  ``a/b`` and produce NaN/inf that propagate through gradients and
+  ``min``/``max`` reductions.  Checked file-wide (the pattern is wrong
+  in any jax code).
+* PY205 — a ``jnp`` reduction (``sum``/``min``/``max``/``mean``/
+  ``any``/``all``, call or method form) in traced code whose operand
+  subtree has no validity-mask indicator: in this codebase every
+  ``[T]``/``[E]``-shaped array is padded, so an unmasked reduction
+  reads filler lanes.  Indicators: a mask-ish name anywhere in the
+  operand (``valid``/``mask``/``active``/...), an inline ``jnp.where``,
+  or an ``initial=``/``where=`` keyword.
+
+Suppress with ``# simlint: disable=RULE[,RULE...]`` on the finding's
+line or on a comment-only line directly above it.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from .report import Finding
+
+_TRACED_FACTORY = re.compile(r"^_?make_")
+_LAX_FLOW = {"while_loop", "fori_loop", "scan", "cond", "switch"}
+_NP_ROOTS = {"np", "numpy"}
+_JNP_ROOTS = {"jnp"}
+_NP_ALLOWED = {"float32", "float64", "int32", "int64", "uint32", "uint8",
+               "bool_", "dtype", "iinfo", "finfo", "ndim", "shape"}
+_REDUCTIONS = {"sum", "min", "max", "mean", "any", "all", "prod"}
+# names that signal a validity mask is involved in a reduction operand
+_MASKISH = re.compile(
+    r"valid|mask|active|running|waiting|eligible|elig|cand|done|started"
+    r"|pick|frozen|live|occ|enabled|needed|cross|due|ready|blocked"
+    r"|missing|produced|newly|sat\b|take|free|queued|handled|prod",
+    re.IGNORECASE)
+_DIRECTIVE = re.compile(r"#\s*simlint:\s*disable=([A-Z0-9,\s]+)")
+
+
+def parse_suppressions(source: str) -> dict:
+    """``{line_number: {rule, ...}}`` — a trailing directive covers its
+    own line; a comment-only directive line covers the next line."""
+    out = {}
+    lines = source.splitlines()
+    for i, line in enumerate(lines, start=1):
+        m = _DIRECTIVE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        target = i + 1 if line.lstrip().startswith("#") else i
+        out.setdefault(target, set()).update(rules)
+        out.setdefault(i, set()).update(rules)
+    return out
+
+
+def _root_name(node):
+    """Leftmost Name of an attribute/subscript/call chain, or None."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _attr_chain(node):
+    """('np', 'where') for ``np.where``; () when not a plain chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _names_in(node):
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _traced_functions(tree):
+    """Function/lambda nodes considered traced (see module docstring),
+    deduplicated, each paired with its own parameter-name set."""
+    traced = {}
+
+    def add(fn):
+        if id(fn) in traced:
+            return
+        if isinstance(fn, ast.Lambda):
+            a = fn.args
+        else:
+            a = fn.args
+        params = {p.arg for p in
+                  (a.posonlyargs + a.args + a.kwonlyargs)}
+        if a.vararg:
+            params.add(a.vararg.arg)
+        if a.kwarg:
+            params.add(a.kwarg.arg)
+        traced[id(fn)] = (fn, params)
+
+    by_name = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name[node.name] = node
+
+    for node in ast.walk(tree):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and _TRACED_FACTORY.match(node.name)):
+            for inner in ast.walk(node):
+                if inner is not node and isinstance(
+                        inner, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                    add(inner)
+        elif isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain and chain[-1] in _LAX_FLOW and chain[0] in (
+                    "lax", "jax"):
+                for arg in node.args:
+                    if isinstance(arg, ast.Lambda):
+                        add(arg)
+                    elif (isinstance(arg, ast.Name)
+                          and arg.id in by_name):
+                        add(by_name[arg.id])
+    return list(traced.values())
+
+
+def _is_literalish(node):
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp):
+        return _is_literalish(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _is_literalish(node.left) and _is_literalish(node.right)
+    return False
+
+
+def _has_guard(node):
+    """True when a division denominator is already protected by
+    ``jnp.maximum`` / ``jnp.clip`` / ``jnp.where`` inside itself."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            chain = _attr_chain(n.func)
+            if (len(chain) >= 2 and chain[0] in _JNP_ROOTS
+                    and chain[-1] in ("maximum", "clip", "where")):
+                return True
+    return False
+
+
+def _is_scatter(func):
+    """``x.at[idx].max(v)`` is a scatter, not a reduction: the method's
+    receiver is a subscript of an ``.at`` property."""
+    v = func.value
+    return (isinstance(v, ast.Subscript)
+            and isinstance(v.value, ast.Attribute) and v.value.attr == "at")
+
+
+def _mask_indicator(nodes):
+    """Does any node subtree show evidence of masking?"""
+    for root in nodes:
+        for n in ast.walk(root):
+            if isinstance(n, ast.Name) and _MASKISH.search(n.id):
+                return True
+            if isinstance(n, ast.Attribute) and _MASKISH.search(n.attr):
+                return True
+            if (isinstance(n, ast.Constant) and isinstance(n.value, str)
+                    and _MASKISH.search(n.value)):
+                return True
+            if isinstance(n, ast.Call):
+                chain = _attr_chain(n.func)
+                if (len(chain) >= 2 and chain[0] in _JNP_ROOTS
+                        and chain[-1] == "where"):
+                    return True
+    return False
+
+
+def check_source(source: str, path: str = "<string>"):
+    """All PY2xx findings for one file's source text."""
+    tree = ast.parse(source, filename=path)
+    suppressed = parse_suppressions(source)
+    findings = []
+    seen = set()
+
+    def emit(rule, node, message):
+        key = (rule, node.lineno, message)
+        if key in seen:
+            return
+        seen.add(key)
+        findings.append(Finding(
+            rule=rule, location=f"{path}:{node.lineno}", message=message,
+            suppressed=rule in suppressed.get(node.lineno, ())))
+
+    # ---- file-wide: PY204 (double-NaN where) -------------------------
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if not (len(chain) >= 2 and chain[0] in _JNP_ROOTS
+                and chain[-1] == "where" and len(node.args) == 3):
+            continue
+        cond, yes, no = node.args
+        cond_names = _names_in(cond)
+        for branch in (yes, no):
+            for n in ast.walk(branch):
+                if (isinstance(n, ast.BinOp)
+                        and isinstance(n.op, (ast.Div, ast.FloorDiv,
+                                              ast.Mod))):
+                    den = n.right
+                    if _has_guard(den):
+                        continue
+                    hit = _names_in(den) & cond_names
+                    if hit:
+                        emit("PY204", node,
+                             f"where-guarded division: denominator "
+                             f"{'/'.join(sorted(hit))} is tested only in "
+                             f"the where condition; unselected lanes "
+                             f"still evaluate it (use the double-where "
+                             f"pattern)")
+
+    # ---- traced-context rules ---------------------------------------
+    for fn, params in _traced_functions(tree):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                # PY201: concretizing builtins
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in ("float", "int", "bool")
+                        and len(node.args) == 1
+                        and not _is_literalish(node.args[0])):
+                    emit("PY201", node,
+                         f"{node.func.id}() on a potential tracer in "
+                         f"traced code")
+                # PY202: numpy in traced code
+                chain = _attr_chain(node.func)
+                if (len(chain) >= 2 and chain[0] in _NP_ROOTS
+                        and chain[-1] not in _NP_ALLOWED):
+                    emit("PY202", node,
+                         f"numpy call {'.'.join(chain)}() constant-folds "
+                         f"at trace time; use jnp")
+                # PY205: unmasked reduction
+                red = None
+                operands = []
+                if (len(chain) >= 2 and chain[0] in _JNP_ROOTS
+                        and chain[-1] in _REDUCTIONS):
+                    red = chain[-1]
+                    operands = list(node.args)
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in _REDUCTIONS
+                      and not _is_scatter(node.func)
+                      and not (len(chain) >= 2
+                               and chain[0] in _NP_ROOTS | _JNP_ROOTS)):
+                    red = node.func.attr    # method form: x.sum()
+                    operands = [node.func.value] + list(node.args)
+                if red is not None:
+                    kw = {k.arg for k in node.keywords}
+                    if ("initial" not in kw and "where" not in kw
+                            and not _mask_indicator(
+                                operands + [k.value
+                                            for k in node.keywords])):
+                        emit("PY205", node,
+                             f"{red}() over a possibly padded array "
+                             f"with no validity-mask operand")
+            elif isinstance(node, (ast.If, ast.While)):
+                # PY203: value-dependent Python control flow
+                test = node.test
+                if (isinstance(test, ast.Compare)
+                        and all(isinstance(op, (ast.Is, ast.IsNot))
+                                for op in test.ops)):
+                    continue              # `x is None` etc. — static
+                hit = _names_in(test) & params
+                if hit:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    emit("PY203", node,
+                         f"python {kind} on traced parameter "
+                         f"{'/'.join(sorted(hit))} does not trace; use "
+                         f"lax.cond/jnp.where")
+    return findings
+
+
+def default_paths():
+    """The traced-code surfaces simlint watches by default."""
+    pkg = os.path.dirname(os.path.abspath(__file__))  # .../repro/analysis
+    pkg = os.path.dirname(pkg)                        # .../repro
+    return [os.path.join(pkg, "core", "vectorized"),
+            os.path.join(pkg, "kernels"),
+            os.path.join(pkg, "workloads")]
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for dirpath, _dirnames, filenames in os.walk(p):
+                for f in sorted(filenames):
+                    if f.endswith(".py"):
+                        yield os.path.join(dirpath, f)
+
+
+def check_paths(paths=None):
+    """Run every AST rule over the given files/directories (defaults to
+    ``core/vectorized``, ``kernels``, ``workloads``)."""
+    findings = []
+    cwd = os.getcwd()
+    for path in iter_py_files(paths or default_paths()):
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+        rel = os.path.relpath(path, cwd)
+        shown = rel if not rel.startswith("..") else path
+        findings.extend(check_source(source, path=shown))
+    return findings

@@ -1,0 +1,158 @@
+"""simlint layer (b): structural jaxpr differ for recompile diagnosis
+(DESIGN.md §7).
+
+``--assert-compiles`` (benchmarks/survey.py) counts one jit trace per
+(bucket, w_bucket, scheduler, netmodel) compile group; a count mismatch
+historically said only "expected 8, got 11".  ``diff_traces`` turns
+that into a cause: trace the same program at two grid points that are
+*supposed* to share a compile group, align the jaxprs equation by
+equation (recursing into while/scan/cond sub-jaxprs), and name the
+first divergence — the equation index, the primitive, and the aval or
+param that split the group.  Structurally identical jaxprs mean the
+recompiles came from the Python side (argument-signature/weak-type
+differences or a cache-key miss), which the argument-signature report
+makes visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from .jaxpr_checks import _aval_str, _param_jaxprs
+
+
+@dataclasses.dataclass(frozen=True)
+class Divergence:
+    """First structural difference between two jaxprs."""
+    path: str        # nesting path, e.g. "top/while.body_jaxpr"
+    index: int       # equation index at that path (-1: signature level)
+    reason: str      # what differs (primitive, aval, param, eqn count)
+    left: str
+    right: str
+
+    def render(self) -> str:
+        return (f"first divergence at {self.path} eqn {self.index}: "
+                f"{self.reason}\n  left:  {self.left}\n"
+                f"  right: {self.right}")
+
+
+def _eqn_str(eqn):
+    ins = " ".join(_aval_str(v.aval) for v in eqn.invars
+                   if hasattr(v, "aval"))
+    outs = " ".join(_aval_str(v.aval) for v in eqn.outvars
+                    if hasattr(v, "aval"))
+    return f"{eqn.primitive.name} :: {ins} -> {outs}"
+
+
+def _simple_params(eqn):
+    """Eqn params that are not jaxprs, repr-truncated for reporting."""
+    out = {}
+    for k in sorted(eqn.params):
+        if _param_jaxprs(eqn.params[k]):
+            continue
+        r = repr(eqn.params[k])
+        out[k] = r if len(r) <= 120 else r[:117] + "..."
+    return out
+
+
+def diff_jaxprs(a, b, path="top"):
+    """First structural ``Divergence`` between two jaxprs (or
+    ClosedJaxprs), or None when they are structurally identical."""
+    a = getattr(a, "jaxpr", a)
+    b = getattr(b, "jaxpr", b)
+    sig_a = [_aval_str(v.aval) for v in a.invars]
+    sig_b = [_aval_str(v.aval) for v in b.invars]
+    if sig_a != sig_b:
+        return Divergence(path, -1, "input signature differs",
+                          " ".join(sig_a), " ".join(sig_b))
+    for i, (ea, eb) in enumerate(zip(a.eqns, b.eqns)):
+        if ea.primitive.name != eb.primitive.name:
+            return Divergence(path, i, "primitive differs",
+                              _eqn_str(ea), _eqn_str(eb))
+        if _eqn_str(ea) != _eqn_str(eb):
+            return Divergence(path, i,
+                              f"avals differ on {ea.primitive.name}",
+                              _eqn_str(ea), _eqn_str(eb))
+        pa, pb = _simple_params(ea), _simple_params(eb)
+        if pa != pb:
+            keys = [k for k in sorted(set(pa) | set(pb))
+                    if pa.get(k) != pb.get(k)]
+            return Divergence(
+                path, i, f"params {keys} differ on {ea.primitive.name}",
+                str({k: pa.get(k) for k in keys}),
+                str({k: pb.get(k) for k in keys}))
+        for k in sorted(ea.params):
+            subs_a = _param_jaxprs(ea.params[k])
+            subs_b = _param_jaxprs(eb.params[k])
+            if len(subs_a) != len(subs_b):
+                return Divergence(path, i,
+                                  f"sub-jaxpr count under param {k!r}",
+                                  str(len(subs_a)), str(len(subs_b)))
+            for j, (sa, sb) in enumerate(zip(subs_a, subs_b)):
+                tag = f"{path}/{ea.primitive.name}.{k}" + (
+                    f"[{j}]" if len(subs_a) > 1 else "")
+                d = diff_jaxprs(sa, sb, tag)
+                if d is not None:
+                    return d
+    if len(a.eqns) != len(b.eqns):
+        i = min(len(a.eqns), len(b.eqns))
+        extra = a.eqns[i] if len(a.eqns) > i else b.eqns[i]
+        return Divergence(path, i, "equation count differs "
+                          f"({len(a.eqns)} vs {len(b.eqns)})",
+                          str(len(a.eqns)) + " eqns",
+                          str(len(b.eqns)) + f" eqns (next: "
+                          f"{_eqn_str(extra)})")
+    return None
+
+
+def describe_signature(args, kwargs=None):
+    """Flat ``shape/dtype/weak`` signature of a concrete argument tree —
+    the jit cache key's array part, for identical-jaxpr diagnoses."""
+    leaves = jax.tree_util.tree_leaves((args, kwargs or {}))
+    parts = []
+    for leaf in leaves:
+        aval = jax.api_util.shaped_abstractify(leaf) \
+            if not hasattr(leaf, "aval") else leaf.aval
+        parts.append(_aval_str(aval))
+    return parts
+
+
+def diff_traces(fn, args_a, args_b, labels=("A", "B")):
+    """Trace ``fn`` at two argument tuples and explain why they would
+    (or would not) share one compiled program.  Returns a report
+    string; never raises — trace failures become part of the report."""
+    la, lb = labels
+    try:
+        ja = jax.make_jaxpr(fn)(*args_a)
+    except Exception as e:
+        return f"recompile-diff: tracing {la} failed: {e}"
+    try:
+        jb = jax.make_jaxpr(fn)(*args_b)
+    except Exception as e:
+        return f"recompile-diff: tracing {lb} failed: {e}"
+    d = diff_jaxprs(ja, jb)
+    if d is not None:
+        return (f"recompile-diff: {la} and {lb} trace to *different* "
+                f"programs — this split the compile group.\n{d.render()}")
+    sig_a = describe_signature(args_a)
+    sig_b = describe_signature(args_b)
+    lines = [f"recompile-diff: {la} and {lb} trace to structurally "
+             f"identical jaxprs ({len(ja.jaxpr.eqns)} eqns) — extra "
+             f"compiles come from the Python side (jit cache key: "
+             f"argument signatures, static args, or new function "
+             f"objects per call)."]
+    if sig_a != sig_b:
+        diffs = [f"  leaf {i}: {a} vs {b}"
+                 for i, (a, b) in enumerate(zip(sig_a, sig_b)) if a != b]
+        if len(sig_a) != len(sig_b):
+            diffs.append(f"  leaf count: {len(sig_a)} vs {len(sig_b)}")
+        lines.append("argument signatures differ (each distinct "
+                     "signature compiles once):")
+        lines.extend(diffs)
+    else:
+        lines.append("argument signatures are identical too — suspect "
+                     "rebuilt factory closures (each make_* call "
+                     "returns a new function object with its own jit "
+                     "cache entry).")
+    return "\n".join(lines)

@@ -1,0 +1,92 @@
+"""Finding model, rule registry and report rendering for simlint
+(DESIGN.md §7).
+
+A ``Finding`` is one rule violation at one location; locations are
+either ``path:line`` (AST rules) or ``jaxpr:<target>`` (abstract-trace
+checks, which have no single source line).  Suppressions are trailing
+or preceding-line ``# simlint: disable=RULE[,RULE...]`` comments —
+suppressed findings stay in the report (honesty) but do not fail the
+run, mirroring how ``noqa`` interacts with lint exit codes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+#: rule id -> one-line description (the CLI's ``--list-rules`` output).
+#: JX1xx rules run on abstract-traced jaxprs (``jaxpr_checks``); PY2xx
+#: rules run on the Python source (``ast_rules``).  The compiled-program
+#: invariants each rule enforces are catalogued in DESIGN.md §7.
+RULES = {
+    "JX101": "while/scan carry is shape- or dtype-unstable across "
+             "iterations (trace fails or body input != body output)",
+    "JX102": "weak-typed leaf in a while/scan carry (a Python scalar "
+             "constant baked into the loop state; forces a promotion "
+             "re-trace and risks dtype drift)",
+    "JX103": "float64/complex128 abstract value in a traced program "
+             "(the simulator contract is float32 end to end)",
+    "JX104": "declared traced argument is dead in the jaxpr (the value "
+             "was constant-folded at build time -- the traced-cores "
+             "contract violation class, DESIGN.md §3)",
+    "JX105": "flow-slot pool bound violated (no int32[DOWNLOAD_SLOTS*W] "
+             "slot state in the event-loop carry, or a per-edge f32[E] "
+             "carry survives in slot mode)",
+    "PY201": "float()/int()/bool() on a potential tracer in traced code "
+             "(concretizes; breaks under jit/vmap)",
+    "PY202": "numpy call inside traced code (constant-folds at trace "
+             "time instead of running on device; use jnp)",
+    "PY203": "Python conditional on a traced-function parameter "
+             "(value-dependent control flow does not trace)",
+    "PY204": "jnp.where-masked division whose denominator is guarded "
+             "only by the where condition (produces NaN/inf lanes; use "
+             "the double-where pattern)",
+    "PY205": "reduction over a padded [T]/[E]-shaped array with no "
+             "validity-mask operand in the expression",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # key of RULES
+    location: str      # "src/...py:123" or "jaxpr:<target name>"
+    message: str
+    suppressed: bool = False
+
+    def render(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.location}: {self.rule}{tag}: {self.message}"
+
+
+def active(findings) -> list:
+    """The findings that fail a run (non-suppressed)."""
+    return [f for f in findings if not f.suppressed]
+
+
+def render_report(findings, *, verbose: bool = False) -> str:
+    """Human-readable report: one line per finding (suppressed ones only
+    under ``verbose``), plus a summary line."""
+    findings = list(findings)
+    shown = findings if verbose else active(findings)
+    lines = [f.render() for f in shown]
+    n_sup = len(findings) - len(active(findings))
+    lines.append(f"simlint: {len(active(findings))} finding(s), "
+                 f"{n_sup} suppressed")
+    return "\n".join(lines)
+
+
+def to_json(findings, **meta) -> str:
+    """Machine-readable report (the CI artifact): findings plus a
+    summary block; extra keyword arguments land in ``meta``."""
+    findings = list(findings)
+    doc = {
+        "tool": "simlint",
+        "meta": dict(meta),
+        "summary": {
+            "findings": len(active(findings)),
+            "suppressed": len(findings) - len(active(findings)),
+            "rules": sorted({f.rule for f in active(findings)}),
+        },
+        "findings": [dataclasses.asdict(f) for f in findings],
+    }
+    return json.dumps(doc, indent=2, sort_keys=True) + "\n"

@@ -1,9 +1,9 @@
 """The *irw* dataset — graphs inspired by real workflows (paper Table 1).
 
 #T/#O match Table 1 exactly for ``gridcat``, ``mapreduce`` and
-``fastcrossv``≡``crossv`` structure; the cross-validation graphs use a
+``fastcrossv`` == ``crossv`` structure; the cross-validation graphs use a
 parametrised construction that approximates the table counts (the exact
-published instances live on Zenodo [8]); tests assert a ±20% envelope for
+published instances live on Zenodo [8]); tests assert a +/-20% envelope for
 those and exact counts for the rest.
 """
 from __future__ import annotations

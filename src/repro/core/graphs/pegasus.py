@@ -45,7 +45,7 @@ def montage(seed=0):
                         outputs=[tnormal(rng, 0.5, 0.05) * MiB],
                         name="mImgtbl")
     madd = g.new_task(tnormal(rng, 60, 8),
-                      inputs=[imgtbl.outputs[0]] + [b.outputs[0] for b in bgs],
+                      inputs=[imgtbl.outputs[0], *(b.outputs[0] for b in bgs)],
                       outputs=[tnormal(rng, 30, 3) * MiB,
                                tnormal(rng, 15, 2) * MiB,
                                tnormal(rng, 1, 0.2) * MiB], name="mAdd")

@@ -33,7 +33,7 @@ def annotate_user_estimates(graph: TaskGraph, seed: int = 12345):
     cats: dict = {}
     for t in graph.tasks:
         cats.setdefault(t.name or "task", []).append(t)
-    for name, tasks in cats.items():
+    for tasks in cats.values():
         durs = [t.duration for t in tasks]
         mean = sum(durs) / len(durs)
         sd = math.sqrt(sum((d - mean) ** 2 for d in durs) / len(durs))
@@ -42,7 +42,7 @@ def annotate_user_estimates(graph: TaskGraph, seed: int = 12345):
     ocats: dict = {}
     for o in graph.objects:
         ocats.setdefault(o.parent.name or "task", []).append(o)
-    for name, objs in ocats.items():
+    for objs in ocats.values():
         sizes = [o.size for o in objs]
         mean = sum(sizes) / len(sizes)
         sd = math.sqrt(sum((s - mean) ** 2 for s in sizes) / len(sizes))

@@ -156,7 +156,7 @@ class MaxMinFlowNetModel(NetModelBase):
     def recompute(self, worker_ids):
         caps = {w: self.bandwidth for w in worker_ids}
         rates = maxmin_fairness(self.flows, caps, dict(caps))
-        for f, r in zip(self.flows, rates):
+        for f, r in zip(self.flows, rates, strict=True):
             f.rate = r
 
 

@@ -10,7 +10,7 @@ from .base import SchedulerBase
 class FixedScheduler(SchedulerBase):
     name = "fixed"
 
-    def __init__(self, assignment: dict, priorities: dict = None,
+    def __init__(self, assignment: dict, priorities: dict | None = None,
                  seed: int = 0):
         """assignment: task -> worker id (int) or Worker;
         priorities: task -> float (defaults to reverse task id)."""

@@ -163,7 +163,7 @@ class GeneticScheduler(SchedulerBase):
                 for t in tasks}
 
         def fitness(chrom):
-            assignment = {t: w for t, w in zip(tasks, chrom)}
+            assignment = {t: w for t, w in zip(tasks, chrom, strict=True)}
             return estimate_makespan(view, assignment, order)
 
         pop = [self._random_chromosome(tasks, cand)
@@ -187,4 +187,4 @@ class GeneticScheduler(SchedulerBase):
         for r, i in enumerate(ranked):
             prio[tasks[i]] = float(n - r)
         return [Assignment(t, w, priority=prio[t])
-                for t, w in zip(tasks, best)]
+                for t, w in zip(tasks, best, strict=True)]

@@ -152,7 +152,7 @@ class Simulator:
     def __init__(self, graph, workers, scheduler, netmodel="maxmin",
                  bandwidth=100.0 * 1024 * 1024, imode="exact",
                  msd: float = 0.0, decision_delay: float = 0.0,
-                 max_events: int = None, trace: bool = False):
+                 max_events: int | None = None, trace: bool = False):
         self.graph = graph
         self.workers = resolve_workers(workers)
         self.scheduler = scheduler

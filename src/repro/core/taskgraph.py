@@ -1,6 +1,6 @@
 """Task graph model (paper §2).
 
-TG = (T, O, A): tasks T, data objects O, arcs A ⊆ (T×O) ∪ (O×T).
+TG = (T, O, A): tasks T, data objects O, arcs A subset of (T x O) union (O x T).
 Each object is produced by exactly one task; tasks may have multiple
 outputs (first-class, no dummy tasks). Tasks carry a duration (seconds),
 a CPU-core requirement, and optional user-provided estimates (for the
@@ -21,7 +21,7 @@ class DataObject:
     size: float                      # bytes
     parent: "Task" = None            # producing task (exactly one)
     consumers: list = dataclasses.field(default_factory=list)
-    expected_size: float = None      # user-imode estimate (bytes)
+    expected_size: float | None = None      # user-imode estimate (bytes)
 
     def __hash__(self):
         return self.id
@@ -40,7 +40,7 @@ class Task:
     cpus: int = 1                    # core requirement
     outputs: list = dataclasses.field(default_factory=list)
     inputs: list = dataclasses.field(default_factory=list)   # DataObjects
-    expected_duration: float = None  # user-imode estimate (seconds)
+    expected_duration: float | None = None  # user-imode estimate (seconds)
     name: str = ""
 
     def __hash__(self):
@@ -83,7 +83,7 @@ class TaskGraph:
     # ---------------------------------------------------------------- build
     def new_task(self, duration: float, *, outputs: Sequence[float] = (),
                  inputs: Iterable[DataObject] = (), cpus: int = 1,
-                 expected_duration: float = None,
+                 expected_duration: float | None = None,
                  expected_sizes: Sequence[float] = None,
                  name: str = "") -> Task:
         """Create a task producing len(outputs) objects of the given sizes."""
@@ -217,7 +217,7 @@ def merge_graphs(graphs: Sequence[TaskGraph], name: str = "") -> TaskGraph:
             nt = out.new_task(t.duration, outputs=[o.size for o in t.outputs],
                               cpus=t.cpus, expected_duration=t.expected_duration,
                               name=t.name)
-            for o, no in zip(t.outputs, nt.outputs):
+            for o, no in zip(t.outputs, nt.outputs, strict=True):
                 no.expected_size = o.expected_size
             tmap[t] = nt
         for t in g.tasks:

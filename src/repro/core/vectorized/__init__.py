@@ -1,11 +1,12 @@
 """Vectorized (TPU-native) ESTEE simulator."""
 from .specs import (GraphSpec, BucketedGraphSpec, BucketGroup, encode_graph,
-                    as_bucketed, bucket_shape, pad_spec, pad_specs, pad_to,
-                    stack_specs, t_bucket, T_EDGES)
+                    abstract_spec, as_bucketed, bucket_shape, pad_spec,
+                    pad_specs, pad_to, stack_specs, t_bucket, T_EDGES)
 from .sim import (make_simulator, simulate_batch,
                   make_dynamic_simulator, simulate_dynamic_grid,
                   make_bucket_simulator, make_bucket_dynamic_simulator,
                   DynamicGridRunner, BucketedGridRunner, jit_trace_count,
+                  reset_trace_count, trace_counter,
                   DOWNLOAD_SLOTS, PAIR_SLOTS)
 from .scheduling import (VEC_SCHEDULERS, make_vec_scheduler,
                          make_bucket_scheduler,
@@ -19,12 +20,13 @@ from .scheduling import (VEC_SCHEDULERS, make_vec_scheduler,
 from .waterfill import waterfill, waterfill_simple
 
 __all__ = ["GraphSpec", "BucketedGraphSpec", "BucketGroup", "encode_graph",
-           "as_bucketed", "bucket_shape", "pad_spec", "pad_specs", "pad_to",
-           "stack_specs", "t_bucket", "T_EDGES",
+           "abstract_spec", "as_bucketed", "bucket_shape", "pad_spec",
+           "pad_specs", "pad_to", "stack_specs", "t_bucket", "T_EDGES",
            "make_simulator", "simulate_batch",
            "make_dynamic_simulator", "simulate_dynamic_grid",
            "make_bucket_simulator", "make_bucket_dynamic_simulator",
            "DynamicGridRunner", "BucketedGridRunner", "jit_trace_count",
+           "reset_trace_count", "trace_counter",
            "DOWNLOAD_SLOTS", "PAIR_SLOTS",
            "VEC_SCHEDULERS", "make_vec_scheduler", "make_bucket_scheduler",
            "make_static_blevel_scheduler", "make_static_tlevel_scheduler",

@@ -262,7 +262,8 @@ def make_bucket_mcp_scheduler(n_workers, cores, max_cores=None):
     ``DetMCPScheduler``)."""
     def order_fn(bspec, est_dur):
         bl = bucket_blevel(bspec, est_dur)
-        return jnp.argsort(jnp.max(bl) - bl, stable=True)
+        # padded tasks have b-level 0, so the unmasked max is the true CP
+        return jnp.argsort(jnp.max(bl) - bl, stable=True)  # simlint: disable=PY205
 
     return _make_bucket_list_scheduler(n_workers, cores, order_fn,
                                        max_cores)
@@ -320,10 +321,12 @@ def make_bucket_etf_scheduler(n_workers, cores, max_cores=None):
             est = jnp.where(frontier[:, None] & eligible_tw, est, jnp.inf)
             # lexicographic min of (est, -bl, task id, worker id)
             flat_est = est.reshape(-1)
-            cand = flat_est == jnp.min(flat_est)
+            # est is inf outside frontier x eligible; padded tasks are
+            # zero-cost frontier members whose commits are no-ops
+            cand = flat_est == jnp.min(flat_est)  # simlint: disable=PY205
             flat_bl = jnp.broadcast_to(bl[:, None], (T, W)).reshape(-1)
             key = jnp.where(cand, flat_bl, NEG)
-            cand = cand & (key == jnp.max(key))
+            cand = cand & (key == jnp.max(key))  # simlint: disable=PY205
             idx = jnp.argmax(cand)                  # first = smallest (t, w)
             t, w = idx // W, idx % W
             finish = flat_est[idx] + est_dur[t]
@@ -485,9 +488,11 @@ def make_bucket_greedy_placer(n_workers, cores):
             pw, load = st
             active = ready_unassigned[t]
             c = jnp.where(cores_j >= cpus[t], cost_tw[t], jnp.inf)
-            cand = c == jnp.min(c)
+            # ineligible workers are inf/BIG-masked just above; the mins
+            # pick among eligible candidates only
+            cand = c == jnp.min(c)  # simlint: disable=PY205
             ld = jnp.where(cand, load, BIG)
-            cand = cand & (ld == jnp.min(ld))
+            cand = cand & (ld == jnp.min(ld))  # simlint: disable=PY205
             w = jnp.argmax(cand).astype(jnp.int32)  # first = smallest id
             pw = pw.at[t].set(jnp.where(active, w, pw[t]))
             load = load.at[w].add(jnp.where(active, 1, 0))

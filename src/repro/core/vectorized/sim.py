@@ -165,9 +165,36 @@ def jit_trace_count() -> int:
     return _TRACE_COUNT[0]
 
 
+def reset_trace_count() -> int:
+    """Zero the odometer and return the value it had — per-grid-run
+    attribution without cross-test/cross-sweep bleed (callers that only
+    ever diffed ``jit_trace_count()`` still work unchanged)."""
+    old = _TRACE_COUNT[0]
+    _TRACE_COUNT[0] = 0
+    return old
+
+
+class trace_counter:
+    """Scoped compile counting: ``with trace_counter() as tc: ...;
+    tc.count`` is the number of simulator jit traces inside the block
+    (valid during and after the block).  Nests safely — it reads
+    deltas, never resets the global odometer."""
+
+    def __enter__(self):
+        self._start = _TRACE_COUNT[0]
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    @property
+    def count(self) -> int:
+        return _TRACE_COUNT[0] - self._start
+
+
 def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
-                          flow_rounds: int = 4, max_steps: int = None, *,
-                          max_cores: int = None, flow_slots=None,
+                          flow_rounds: int = 4, max_steps: int | None = None, *,
+                          max_cores: int | None = None, flow_slots=None,
                           waterfill_impl: str = "auto",
                           return_steps: bool = False):
     """Returns ``run(bspec, assignment, priority, durations, sizes,
@@ -378,7 +405,12 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
             else:
                 active = st["f_started"] & ~st["f_done"] & needed
                 rem = st["f_rem"]
-            f_eta = jnp.where(active & (rates > 0), rem / rates, jnp.inf)
+            # double-where: unselected lanes still evaluate the division,
+            # so the denominator needs its own guard or rate-0 lanes
+            # produce inf*0/NaN that poison min-reductions downstream
+            safe_rates = jnp.where(rates > 0, rates, 1.0)
+            f_eta = jnp.where(active & (rates > 0), rem / safe_rates,
+                              jnp.inf)
             f_eta = jnp.where(f_eta <= gran, 0.0, f_eta)
             f_next = st["now"] + jnp.min(f_eta, initial=jnp.inf)
             nxt = jnp.minimum(t_next, f_next)
@@ -423,7 +455,7 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
 
 def make_simulator(spec: GraphSpec, n_workers: int, cores,
                    netmodel: str = "maxmin", flow_rounds: int = 4,
-                   max_steps: int = None, **kwargs):
+                   max_steps: int | None = None, **kwargs):
     """Legacy per-graph binding of ``make_bucket_simulator``: returns
     ``run(assignment, priority, durations, sizes, bandwidth) ->
     (makespan, transferred_bytes, ok)`` with ``spec`` baked in.
@@ -500,8 +532,8 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
                                   scheduler: str = "blevel",
                                   netmodel: str = "maxmin",
                                   flow_rounds: int = 4,
-                                  max_steps: int = None, *,
-                                  max_cores: int = None, flow_slots=None,
+                                  max_steps: int | None = None, *,
+                                  max_cores: int | None = None, flow_slots=None,
                                   waterfill_impl: str = "auto",
                                   return_steps: bool = False):
     """Returns ``run(bspec, est_durations, est_sizes, msd, decision_delay,
@@ -838,11 +870,18 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             else:
                 active = st["f_started"] & ~st["f_done"]
                 rem = st["f_rem"]
-            f_eta = jnp.where(active & (rates > 0), rem / rates, jnp.inf)
+            # double-where: unselected lanes still evaluate the division,
+            # so the denominator needs its own guard or rate-0 lanes
+            # produce inf*0/NaN that poison min-reductions downstream
+            safe_rates = jnp.where(rates > 0, rates, 1.0)
+            f_eta = jnp.where(active & (rates > 0), rem / safe_rates,
+                              jnp.inf)
             f_eta = jnp.where(f_eta <= gran, 0.0, f_eta)
             f_next = st["now"] + jnp.min(f_eta, initial=jnp.inf)
             nxt = jnp.minimum(t_next, f_next)
-            nxt = jnp.minimum(nxt, jnp.min(st["pt"]))
+            # pending-apply times are inf when unset and padded tasks
+            # never get a pending slot, so the unmasked min is exact
+            nxt = jnp.minimum(nxt, jnp.min(st["pt"]))  # simlint: disable=PY205
             if dynamic_sched:
                 sched_next = jnp.where(
                     st["events"], jnp.maximum(st["now"], st["last"] + msd_),
@@ -889,7 +928,7 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
 def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
                            scheduler: str = "blevel",
                            netmodel: str = "maxmin", flow_rounds: int = 4,
-                           max_steps: int = None, **kwargs):
+                           max_steps: int | None = None, **kwargs):
     """Legacy per-graph binding of ``make_bucket_dynamic_simulator``:
     returns ``run(est_durations, est_sizes, msd, decision_delay,
     bandwidth, seed) -> (makespan, transferred_bytes, ok)`` with ``spec``

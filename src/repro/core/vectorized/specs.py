@@ -194,6 +194,28 @@ def stack_specs(bspecs) -> BucketedGraphSpec:
         np.stack([getattr(b, f) for b in bspecs]) for f in _BSPEC_FIELDS))
 
 
+def abstract_spec(shape, batch: int | None = None) -> BucketedGraphSpec:
+    """A ``BucketedGraphSpec`` of ``jax.ShapeDtypeStruct`` leaves — the
+    abstract argument ``repro.analysis`` feeds ``jax.make_jaxpr`` to
+    trace simulator factories without building a graph (same dtypes as
+    ``pad_spec`` output; optional leading batch axis)."""
+    T, O, E = shape
+    lead = () if batch is None else (int(batch),)
+    sds = jax.ShapeDtypeStruct
+    return BucketedGraphSpec(
+        durations=sds(lead + (T,), np.float32),
+        cpus=sds(lead + (T,), np.int32),
+        sizes=sds(lead + (O,), np.float32),
+        producer=sds(lead + (O,), np.int32),
+        edge_task=sds(lead + (E,), np.int32),
+        edge_obj=sds(lead + (E,), np.int32),
+        n_inputs=sds(lead + (T,), np.int32),
+        task_valid=sds(lead + (T,), np.bool_),
+        obj_valid=sds(lead + (O,), np.bool_),
+        edge_valid=sds(lead + (E,), np.bool_),
+    )
+
+
 def pad_to(a, n, fill=0.0):
     """Pad a per-task/object vector (e.g. an ``encode_imode`` estimate)
     to the bucket length with an inert fill."""

@@ -48,7 +48,9 @@ def waterfill(src, dst, active, caps_up, caps_down, max_rounds=None):
         counts = (jnp.zeros(2 * W, jnp.float32).at[res_idx_u].add(livef)
                   .at[res_idx_d].add(livef))
         share = jnp.where(counts > 0, cap_rem / jnp.maximum(counts, 1.0), INF)
-        min_share = jnp.min(share)
+        # idle resources carry INF shares and never win the min; once no
+        # flow is live the loop condition has already exited
+        min_share = jnp.min(share)  # simlint: disable=PY205
         is_bn = (share <= min_share * (1.0 + 1e-9)) & (counts > 0)
         freeze = live & (is_bn[res_idx_u] | is_bn[res_idx_d])
         rates = jnp.where(freeze, min_share, rates)

@@ -28,7 +28,7 @@ class Assignment:
     task: object
     worker: "Worker"
     priority: float = 0.0
-    blocking: float = None      # defaults to priority
+    blocking: float | None = None      # defaults to priority
 
     def __post_init__(self):
         if self.blocking is None:

@@ -26,7 +26,7 @@ class DataConfig:
     global_batch: int
     seed: int = 0
     codebooks: int = 0             # audio archs: tokens [B, S, K]
-    token_file: str = None         # optional mmap token source
+    token_file: str | None = None         # optional mmap token source
 
 
 class TokenPipeline:

@@ -9,6 +9,7 @@ tests.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention as _flash_pallas
@@ -18,6 +19,20 @@ from .waterfill import waterfill_batch as _waterfill_pallas
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _require_f32(op: str, **arrays) -> None:
+    """The simulators are float32-only (the JX103 invariant checked
+    statically by ``repro.analysis``): a float64 leaking in under x64
+    mode would silently upcast the whole max-min pipeline and desync the
+    Pallas kernels (f32 VMEM refs) from the jnp oracle.  Fail loudly at
+    the wrapper boundary instead."""
+    for name, x in arrays.items():
+        if jnp.result_type(x) == jnp.float64:
+            raise TypeError(
+                f"kernels.{op}: argument {name!r} is float64; the "
+                f"simulator pipeline is float32-only (cast with "
+                f"jnp.float32 / .astype(jnp.float32) at the call site)")
 
 
 def attention(q, k, v, *, causal=True, window=0, scale=None, kv_len=None,
@@ -55,6 +70,7 @@ def waterfill(src, dst, active, caps_up, caps_down, *, use_pallas=False,
     the Pallas kernel's batch grid dimension *is* the vmap axis, so a
     whole batch of simulations becomes one kernel launch per event.
     """
+    _require_f32("waterfill", caps_up=caps_up, caps_down=caps_down)
     unbatched = src.ndim == 1
     if unbatched:
         src, dst, active, caps_up, caps_down = (

@@ -46,7 +46,9 @@ def _waterfill_kernel(src_ref, dst_ref, active_ref, capu_ref, capd_ref,
                          preferred_element_type=jnp.float32)[0]   # [2W]
         share = jnp.where(counts > 0, cap / jnp.maximum(counts, 1.0),
                           jnp.inf)
-        min_share = jnp.min(share)
+        # idle resources carry inf shares; the finite-guard below zeroes
+        # min_share once every flow froze (fixed-round fori tail)
+        min_share = jnp.min(share)  # simlint: disable=PY205
         is_bn = ((share <= min_share * (1.0 + 1e-9)) &
                  (counts > 0)).astype(jnp.float32)            # [2W]
         touches = jnp.dot(inc, is_bn[:, None],

@@ -87,7 +87,7 @@ def build_cell(arch: str, shape_name: str, mesh, policy: Policy,
         overrides["moe_dispatch"] = policy.moe_dispatch
         # group-local dispatch aligned with the DP shard count
         import numpy as _np
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
         overrides["moe_groups"] = int(_np.prod(
             [sizes.get(a, 1) for a in ("pod", "data")]))
     if shape.kind == "decode":

@@ -151,7 +151,7 @@ def roofline_terms(compiled, hlo_text: str, n_chips: int,
 
 
 def model_flops(cfg, shape) -> float:
-    """Analytic MODEL_FLOPS: 6·N·D train, 2·N·D forward (active params)."""
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D forward (active params)."""
     n_active = cfg.active_param_count()
     tokens = shape.global_batch * shape.seq_len
     if shape.kind == "train":

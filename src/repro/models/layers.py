@@ -202,7 +202,7 @@ def _moe_gather(x, p, cfg, policy=None):
             return t
         from jax.sharding import NamedSharding, PartitionSpec as P
         ba = policy.batch_axes
-        spec = [ba if len(ba) > 1 else ba[0]] + [None] * (t.ndim - 1)
+        spec = [ba if len(ba) > 1 else ba[0], *([None] * (t.ndim - 1))]
         return jax.lax.with_sharding_constraint(
             t, NamedSharding(policy.mesh, P(*spec)))
 

@@ -20,7 +20,7 @@ from jax.tree_util import tree_map_with_path, DictKey
 
 
 def _axis_size(mesh, name):
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     return sizes.get(name, 1)
 
 

@@ -40,7 +40,7 @@ class ShardingPolicy:
         if self.mesh is None or x.ndim < 2:
             return x
         from jax.sharding import NamedSharding, PartitionSpec as P
-        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape, strict=True))
         spec = [None] * x.ndim
         bsz = int(np.prod([sizes[a] for a in self.batch_axes])) if \
             self.batch_axes else 1

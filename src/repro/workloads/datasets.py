@@ -116,7 +116,7 @@ def _task_counts(dataset, seed: int = 0):
     return counts
 
 
-def compute_bucket_edges(dataset, k: int = None,
+def compute_bucket_edges(dataset, k: int | None = None,
                          multiple: int = PAD_MULTIPLE, seed: int = 0):
     """Derive ``T_EDGES``-style task-count bucket edges from a dataset.
 

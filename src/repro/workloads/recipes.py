@@ -43,7 +43,7 @@ sd)``, ``("texp", mean)``, ``("uniform", lo, hi)``, ``("const", v)``,
 ``("randint", lo, hi)`` — sampled via ``sample_dist``.  The duration
 and size dists are *unit jitters*: each task category has a family
 mean which the sampled factor multiplies, so one knob reshapes a whole
-instance (heavier tails, exponential runtimes, …) without touching the
+instance (heavier tails, exponential runtimes, ...) without touching the
 structure.
 """
 from __future__ import annotations
@@ -127,7 +127,7 @@ def _montage(g: TaskGraph, s: _Sampler, n: int):
     imgtbl = g.new_task(s.dur(8), inputs=[b.outputs[0] for b in bgs],
                         outputs=[s.size(0.5)], name="mImgtbl")
     madd = g.new_task(s.dur(60), cpus=s.cpus(),
-                      inputs=[imgtbl.outputs[0]] + [b.outputs[0] for b in bgs],
+                      inputs=[imgtbl.outputs[0], *(b.outputs[0] for b in bgs)],
                       outputs=[s.size(30), s.size(15), s.size(1)],
                       name="mAdd")
     shrink = g.new_task(s.dur(10), inputs=[madd.outputs[0]],

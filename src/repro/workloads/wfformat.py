@@ -207,7 +207,7 @@ def load_wfformat(src, normalize_machines: bool = True,
         t = g.new_task(duration, inputs=inputs, cpus=max(1, cores),
                        outputs=[out_sizes[f] for f in outs],
                        name=_category(name))
-        for f, o in zip(outs, t.outputs):
+        for f, o in zip(outs, t.outputs, strict=True):
             objects[f] = o
         # parents declared without a shared file: zero-size control edge
         covered = {o.parent for o in inputs}
@@ -222,7 +222,7 @@ def load_wfformat(src, normalize_machines: bool = True,
     return finish(g, zlib.crc32(g.name.encode()) + seed)
 
 
-def dump_wfformat(graph: TaskGraph, name: str = None,
+def dump_wfformat(graph: TaskGraph, name: str | None = None,
                   schema_version: str = "1.4") -> dict:
     """``TaskGraph`` -> WfFormat dict (flat v1.x layout).  Inverse of
     ``load_wfformat`` up to the import-time mapping rules (external
@@ -253,7 +253,7 @@ def dump_wfformat(graph: TaskGraph, name: str = None,
     }
 
 
-def save_wfformat(graph: TaskGraph, path, name: str = None) -> str:
+def save_wfformat(graph: TaskGraph, path, name: str | None = None) -> str:
     """Write ``dump_wfformat(graph)`` as JSON; returns the path."""
     with open(path, "w") as f:
         json.dump(dump_wfformat(graph, name=name), f, indent=2,

@@ -1,0 +1,384 @@
+"""simlint (``repro.analysis``, DESIGN.md §7): seeded-violation
+fixtures each tripping exactly their rule, the clean-repo contract
+(zero non-suppressed findings on this codebase), the jaxpr differ
+naming the first divergent equation for a deliberately split compile
+group, and the CLI/JSON report surface.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (Target, active, check_all, check_paths,
+                            check_source, check_target, default_targets,
+                            diff_jaxprs, diff_traces, render_report,
+                            to_json)
+from repro.analysis.ast_rules import parse_suppressions
+from repro.core.vectorized import abstract_spec
+from repro.core.vectorized.sim import make_bucket_simulator
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sds = jax.ShapeDtypeStruct
+
+
+def target(fn, args, argnames, required_live=(), **kw):
+    return Target(name="fixture", fn=fn, args=args, argnames=argnames,
+                  required_live=frozenset(required_live), **kw)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ------------------------------------------------- JX1xx seeded fixtures
+
+def test_jx101_unstable_carry():
+    """A while carry whose body flips dtype is rejected at trace time;
+    simlint reports the rejection as JX101 instead of crashing."""
+    def bad(x):
+        return jax.lax.while_loop(
+            lambda c: c[1] < 3,
+            lambda c: (c[0].astype(jnp.int32), c[1] + 1),
+            (x, jnp.int32(0)))
+
+    out = check_target(target(bad, (sds((4,), np.float32),), ("x",),
+                              required_live={"x"}))
+    assert rules_of(out) == ["JX101"]
+
+
+def test_jx102_weak_typed_carry():
+    """A Python float baked into loop state stays weak-typed through the
+    whole while carry: JX102, and nothing else."""
+    def weak(x):
+        return jax.lax.while_loop(
+            lambda c: c[1] < jnp.float32(3),
+            lambda c: (c[0] + 1.0, c[1] + jnp.float32(1)),
+            (0.0, jnp.float32(0)))
+
+    out = check_target(target(weak, (sds((), np.float32),), ("x",)))
+    assert rules_of(out) == ["JX102"]
+    assert "slot 0" in out[0].message
+
+
+def test_jx103_float64_aval():
+    """Under x64 mode a float64 argument produces f64 avals end to end:
+    exactly one JX103 per (path, dtype)."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        out = check_target(target(lambda x: x * 2,
+                                  (sds((4,), np.float64),), ("x",),
+                                  required_live={"x"}))
+    finally:
+        jax.config.update("jax_enable_x64", False)
+    assert rules_of(out) == ["JX103"]
+
+
+def test_jx104_dead_traced_argument():
+    """A required-live leaf that no equation reads is the baked-in-cores
+    violation class."""
+    out = check_target(target(lambda x, cores: x * 2.0,
+                              (sds((4,), np.float32), sds((4,), np.int32)),
+                              ("x", "cores"),
+                              required_live={"x", "cores"}))
+    assert rules_of(out) == ["JX104"]
+    assert "cores" in out[0].message
+    # the same dead leaf is fine when the contract says it may be dead
+    out = check_target(target(lambda x, seed: x * 2.0,
+                              (sds((4,), np.float32), sds((), np.int32)),
+                              ("x", "seed"), required_live={"x"}))
+    assert out == []
+
+
+def test_jx105_pool_missing_and_per_edge_carry():
+    """A slot-mode target whose event loop carries f32[E] state and no
+    int32[S]/float32[S] pool trips both JX105 variants."""
+    def legacy(x):
+        return jax.lax.while_loop(
+            lambda c: c[1] < jnp.float32(3),
+            lambda c: (c[0] * 2.0, c[1] + jnp.float32(1)),
+            (x, jnp.float32(0)))
+
+    out = check_target(target(legacy, (sds((16,), np.float32),), ("x",),
+                              required_live={"x"},
+                              slot_pool=8, n_edges=16))
+    assert rules_of(out) == ["JX105"] and len(out) == 2
+    msgs = " | ".join(f.message for f in out)
+    assert "float32[16] per-edge carry" in msgs
+    assert "no while carry holds" in msgs
+
+
+def test_fori_counter_is_exempt():
+    """``fori_loop`` with Python-int bounds lowers to a scan whose slot-0
+    induction counter is weak int32 in *every* program identically — it
+    must not count as a JX102 weak carry."""
+    def fine(x):
+        return jax.lax.fori_loop(0, 3, lambda i, c: c + jnp.sum(x),
+                                 jnp.float32(0))
+
+    out = check_target(target(fine, (sds((4,), np.float32),), ("x",),
+                              required_live={"x"}))
+    assert out == []
+
+
+# ------------------------------------------------- PY2xx seeded fixtures
+
+PY_FIXTURES = {
+    "PY201": """
+        def make_step():
+            def step(x):
+                return float(x) + 1
+            return step
+        """,
+    "PY202": """
+        import numpy as np
+
+        def make_step():
+            def step(x):
+                return np.maximum(x, 0)
+            return step
+        """,
+    "PY203": """
+        def make_step():
+            def step(x):
+                if x > 0:
+                    return x
+                return -x
+            return step
+        """,
+    "PY204": """
+        import jax.numpy as jnp
+
+        def f_eta(rem, rates):
+            return jnp.where(rates > 0, rem / rates, jnp.inf)
+        """,
+    "PY205": """
+        import jax.numpy as jnp
+
+        def make_step():
+            def step(xs):
+                return jnp.min(xs)
+            return step
+        """,
+}
+
+
+@pytest.mark.parametrize("rule", sorted(PY_FIXTURES))
+def test_py_fixture_trips_exactly_its_rule(rule):
+    out = check_source(textwrap.dedent(PY_FIXTURES[rule]), path="fx.py")
+    assert rules_of(out) == [rule] and len(out) == 1
+    assert not out[0].suppressed
+
+
+def test_untraced_code_is_not_linted():
+    """The PY201/202/203/205 rules only fire inside traced contexts
+    (make_* closures or lax flow bodies) — plain host code may use
+    float()/np/ifs freely."""
+    src = textwrap.dedent("""
+        import numpy as np
+
+        def host(x):
+            if x > 0:
+                return float(np.maximum(x, 0))
+            return x
+        """)
+    assert check_source(src, path="fx.py") == []
+
+
+def test_lax_flow_bodies_are_traced():
+    """A named function passed to ``lax.while_loop`` is a traced context
+    even outside a make_* factory."""
+    src = textwrap.dedent("""
+        import jax
+
+        def body(c):
+            return float(c) + 1
+
+        def host(x):
+            return jax.lax.while_loop(lambda c: c < 3, body, x)
+        """)
+    assert rules_of(check_source(src, path="fx.py")) == ["PY201"]
+
+
+def test_masked_reduction_is_clean():
+    """Reductions whose operand shows a mask indicator (or an
+    ``initial=`` keyword, or scatter form) do not trip PY205."""
+    src = textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def make_step():
+            def step(xs, valid, t):
+                a = jnp.min(jnp.where(valid, xs, jnp.inf))
+                b = jnp.max(xs, initial=0.0)
+                c = xs.at[t].max(1.0)
+                return a + b + c.sum(where=valid)
+            return step
+        """)
+    assert check_source(src, path="fx.py") == []
+
+
+# ----------------------------------------------------------- suppressions
+
+def test_trailing_suppression():
+    src = textwrap.dedent(PY_FIXTURES["PY205"]).replace(
+        "jnp.min(xs)", "jnp.min(xs)  # simlint: disable=PY205")
+    out = check_source(src, path="fx.py")
+    assert len(out) == 1 and out[0].suppressed
+    assert active(out) == []
+
+
+def test_preceding_line_suppression():
+    src = textwrap.dedent(PY_FIXTURES["PY205"]).replace(
+        "return jnp.min(xs)",
+        "# simlint: disable=PY205\n                return jnp.min(xs)")
+    out = check_source(src, path="fx.py")
+    assert len(out) == 1 and out[0].suppressed
+
+
+def test_suppression_is_rule_specific():
+    src = textwrap.dedent(PY_FIXTURES["PY205"]).replace(
+        "jnp.min(xs)", "jnp.min(xs)  # simlint: disable=PY204")
+    out = check_source(src, path="fx.py")
+    assert len(out) == 1 and not out[0].suppressed
+
+
+def test_parse_suppressions():
+    src = ("x = 1  # simlint: disable=PY201\n"
+           "# simlint: disable=PY204, PY205\n"
+           "y = 2\n")
+    sup = parse_suppressions(src)
+    assert sup[1] == {"PY201"}
+    assert sup[3] == {"PY204", "PY205"}
+
+
+# --------------------------------------------------- clean-repo contract
+
+def test_clean_repo_ast():
+    """The shipped traced-code surfaces carry zero non-suppressed AST
+    findings; the reasoned suppressions are still visible (honesty)."""
+    out = check_paths()
+    assert active(out) == [], render_report(out, verbose=True)
+    assert any(f.suppressed for f in out)
+
+
+def test_clean_jaxpr_grid():
+    """Every registered factory over the default survey check grid
+    upholds the JX1xx invariants."""
+    out = check_all()
+    assert out == [], render_report(out, verbose=True)
+
+
+def test_default_targets_cover_grid():
+    names = [t.name for t in default_targets()]
+    # 2 static sims + 6 schedulers x 2 netmodels + 5 static bindings
+    assert len(names) == 19 and len(set(names)) == 19
+    # one maxmin static sim + six maxmin dynamic sims carry the pool bound
+    assert sum(t.slot_pool is not None for t in default_targets()) == 7
+
+
+# ------------------------------------------------------------ the differ
+
+def _static_sim_args(W=2, shape=(16, 16, 32)):
+    T = shape[0]
+    return (abstract_spec(shape), sds((T,), np.int32), sds((T,), np.float32),
+            None, None, sds((), np.float32), sds((W,), np.int32))
+
+
+def test_diff_jaxprs_identical_is_none():
+    x = sds((4,), np.float32)
+    ja = jax.make_jaxpr(lambda v: jnp.sin(v) + 1.0)(x)
+    jb = jax.make_jaxpr(lambda v: jnp.sin(v) + 1.0)(x)
+    assert diff_jaxprs(ja, jb) is None
+
+
+def test_diff_jaxprs_names_first_divergent_eqn():
+    x = sds((4,), np.float32)
+    ja = jax.make_jaxpr(lambda v: v + 1.0)(x)
+    jb = jax.make_jaxpr(lambda v: jnp.sin(v) + 1.0)(x)
+    d = diff_jaxprs(ja, jb)
+    assert d is not None and d.index == 0 and "primitive" in d.reason
+    assert "first divergence at top eqn 0" in d.render()
+
+
+def test_diff_names_eqn_for_split_compile_group():
+    """The acceptance case: two simulator programs that should *not*
+    share a compile group (maxmin vs simple netmodel) — the differ names
+    the first divergent equation, not just 'they differ'."""
+    args = _static_sim_args()
+    ja = jax.make_jaxpr(make_bucket_simulator(2, None, "maxmin",
+                                              max_cores=4))(*args)
+    jb = jax.make_jaxpr(make_bucket_simulator(2, None, "simple",
+                                              max_cores=4))(*args)
+    d = diff_jaxprs(ja, jb)
+    assert d is not None and d.index >= 0
+    assert d.left and d.right and "first divergence" in d.render()
+
+
+def test_diff_traces_report_paths():
+    x = sds((4,), np.float32)
+    y = sds((8,), np.float32)
+    fn = lambda v: v * 2.0                                  # noqa: E731
+    same = diff_traces(fn, (jnp.zeros(4),), (jnp.zeros(4),))
+    assert "identical jaxprs" in same and "identical too" in same
+    split = diff_traces(fn, (x,), (y,))
+    assert "different" in split and "float32[4]" in split
+
+
+# --------------------------------------------------------- report surface
+
+def test_to_json_shape():
+    out = check_source(textwrap.dedent(PY_FIXTURES["PY204"]), path="fx.py")
+    doc = json.loads(to_json(out, shape=[32, 64, 96]))
+    assert doc["tool"] == "simlint"
+    assert doc["summary"]["findings"] == 1
+    assert doc["summary"]["rules"] == ["PY204"]
+    assert doc["meta"]["shape"] == [32, 64, 96]
+    assert doc["findings"][0]["location"] == "fx.py:5"
+
+
+def test_render_report_summary_line():
+    out = check_source(textwrap.dedent(PY_FIXTURES["PY204"]), path="fx.py")
+    rep = render_report(out)
+    assert rep.splitlines()[-1] == "simlint: 1 finding(s), 0 suppressed"
+
+
+# ------------------------------------------------------------------- CLI
+
+def _run_cli(*argv):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    return subprocess.run([sys.executable, "-m", "repro.analysis", *argv],
+                          cwd=REPO, env=env, capture_output=True, text=True)
+
+
+def test_cli_list_rules():
+    r = _run_cli("--list-rules")
+    assert r.returncode == 0
+    for rule in ("JX101", "JX105", "PY201", "PY205"):
+        assert rule in r.stdout
+
+
+def test_cli_ast_clean_and_json(tmp_path):
+    """The repo-wide AST run (the fast half of the CI gate) exits 0 and
+    writes the machine-readable artifact."""
+    report = tmp_path / "simlint.json"
+    r = _run_cli("--no-jaxpr", "--json", str(report))
+    assert r.returncode == 0, r.stdout + r.stderr
+    doc = json.loads(report.read_text())
+    assert doc["summary"]["findings"] == 0
+    assert doc["summary"]["suppressed"] >= 1
+
+
+def test_cli_fails_on_seeded_violation(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(PY_FIXTURES["PY204"]))
+    r = _run_cli("--no-jaxpr", "--paths", str(bad))
+    assert r.returncode == 1
+    assert "PY204" in r.stdout

@@ -18,7 +18,8 @@ from repro.core.graphs import make_graph, survey_names, encode_graph_batch
 from repro.core.vectorized import (encode_graph, pad_spec, pad_specs,
                                    stack_specs, t_bucket, bucket_shape,
                                    BucketedGridRunner, DynamicGridRunner,
-                                   jit_trace_count)
+                                   jit_trace_count, reset_trace_count,
+                                   trace_counter)
 
 import test_vectorized_dynamic as tvd
 
@@ -120,15 +121,32 @@ def test_bucketed_batch_matches_per_graph_survey_reps(sched):
 
 def test_one_compile_serves_a_bucket():
     """Compile-count regression gate: a two-graph bucket costs exactly
-    one jit trace, and warm calls cost none."""
+    one jit trace, and warm calls cost none (scoped ``trace_counter``,
+    so parallel test files can't bleed into the delta)."""
     g1, g2 = tvd.mini_fork(), tvd.mini_merge()
-    t0 = jit_trace_count()
-    runner = BucketedGridRunner([(g1, None), (g2, None)], "blevel", 4, 2)
-    ms, _ = runner(POINTS[:2])
-    assert jit_trace_count() - t0 == 1
-    assert ms.shape == (2, 2) and np.isfinite(ms).all()
-    runner(POINTS[:2])
-    assert jit_trace_count() - t0 == 1
+    with trace_counter() as tc:
+        runner = BucketedGridRunner([(g1, None), (g2, None)], "blevel", 4, 2)
+        ms, _ = runner(POINTS[:2])
+        assert tc.count == 1
+        assert ms.shape == (2, 2) and np.isfinite(ms).all()
+        runner(POINTS[:2])
+    assert tc.count == 1                     # warm call: no retrace
+
+
+def test_trace_count_reset_and_nesting():
+    """``reset_trace_count`` zeroes the odometer and returns the old
+    value; ``trace_counter`` reads deltas so nested scopes and a reset
+    survivor (``jit_trace_count`` callers) stay coherent."""
+    g = tvd.mini_fork()
+    reset_trace_count()
+    assert jit_trace_count() == 0
+    with trace_counter() as outer:
+        with trace_counter() as inner:
+            BucketedGridRunner([(g, None)], "blevel", 4, 2)(POINTS[:1])
+        assert inner.count == 1
+    assert outer.count == 1
+    old = reset_trace_count()
+    assert old == 1 and jit_trace_count() == 0
 
 
 @pytest.mark.parametrize("cluster", ["1x4+3x2", "2x4+2x1"])

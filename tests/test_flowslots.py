@@ -21,8 +21,8 @@ import jax
 from repro.core import MiB
 from repro.core.graphs import make_graph, random_graph
 from repro.core.imodes import encode_imode
-from repro.core.vectorized import (encode_graph, jit_trace_count,
-                                   make_dynamic_simulator, make_simulator,
+from repro.core.vectorized import (encode_graph, make_dynamic_simulator,
+                                   make_simulator, trace_counter,
                                    BucketedGridRunner)
 
 import test_vectorized_dynamic as tvd
@@ -130,14 +130,14 @@ def test_one_compile_serves_two_same_w_clusters():
     hetero = parse_cluster("1x8+4x2") + [0, 0, 0]
     clusters = np.asarray([[4] * 8, hetero], np.int32)
     pts = [dict(imode=im, bandwidth=100 * MiB) for im in ("exact", "user")]
-    t0 = jit_trace_count()
-    runner = BucketedGridRunner([(g1, None), (g2, None)], "blevel", 8,
-                                clusters)
-    ms, xf = runner(pts)
-    assert jit_trace_count() - t0 == 1
-    assert ms.shape == (2, 2, 2)            # [clusters, graphs, points]
-    runner(pts)
-    assert jit_trace_count() - t0 == 1      # warm call: no retrace
+    with trace_counter() as tc:
+        runner = BucketedGridRunner([(g1, None), (g2, None)], "blevel", 8,
+                                    clusters)
+        ms, xf = runner(pts)
+        assert tc.count == 1
+        assert ms.shape == (2, 2, 2)        # [clusters, graphs, points]
+        runner(pts)
+    assert tc.count == 1                    # warm call: no retrace
     for k, cores in enumerate(clusters):
         single = BucketedGridRunner([(g1, None), (g2, None)], "blevel", 8,
                                     list(cores))
