@@ -36,8 +36,8 @@ import jax
 from repro.core import MiB, TaskGraph, parse_cluster
 from repro.core.graphs import make_graph
 from repro.core.imodes import encode_imode
-from repro.core.vectorized import (encode_graph, make_bucket_simulator,
-                                   make_vec_scheduler)
+from repro.core.vectorized import (build, encode_graph,
+                                   make_bucket_simulator)
 from repro.core.vectorized.sim import DOWNLOAD_SLOTS
 from repro.core.vectorized.specs import pad_spec, pad_to, round_up, t_bucket
 
@@ -88,15 +88,17 @@ def bench_flow_slots(reps=3):
         W = len(cores)
         bw = np.float32(100 * MiB)
         d, s = encode_imode(g, "exact")
-        aw, prio = jax.jit(make_vec_scheduler(spec, W, cores, "blevel"))(
-            d, s, bw)
+        aw, prio = jax.jit(build(spec, n_workers=W, cores=cores,
+                                 scheduler="blevel"))(d, s, bw)
         aw_p = pad_to(np.asarray(aw), shape[0], 0).astype(np.int32)
         prio_p = pad_to(np.asarray(prio), shape[0], 0.0).astype(np.float32)
         row = {"graph": g.name, "cluster": cname,
                "edges": int(spec.E), "slots": DOWNLOAD_SLOTS * W}
         for key, flag in (("per_edge", False), ("flow_slots", True)):
+            # frontier pinned off: this bench tracks the PR-4 slot-pool
+            # delta in the trend pipeline; bench_pr7 owns the frontier
             run = jax.jit(make_bucket_simulator(
-                W, cores, "maxmin", flow_slots=flag, return_steps=True))
+                W, cores, "maxmin", flow_slots=flag, frontier=False))
             res = run(bspec, aw_p, prio_p, None, None, bw)
             jax.block_until_ready(res)           # compile + sanity
             t0 = time.perf_counter()
@@ -104,7 +106,8 @@ def bench_flow_slots(reps=3):
                 res = run(bspec, aw_p, prio_p, None, None, bw)
                 jax.block_until_ready(res)
             wall = (time.perf_counter() - t0) / reps
-            ms, _, ok, steps = (np.asarray(x) for x in res)
+            ms, ok, steps = (np.asarray(res.makespan), np.asarray(res.ok),
+                             np.asarray(res.n_steps))
             if not bool(ok):
                 raise RuntimeError(f"bench graph {g.name} did not finish")
             row[f"{key}_makespan"] = float(ms)

@@ -13,7 +13,7 @@ from repro.core.simulator import Simulator
 from repro.core.worker import Worker
 from repro.core.schedulers.fixed import FixedScheduler
 from repro.core.graphs import make_graph
-from repro.core.vectorized import encode_graph, make_simulator
+from repro.core.vectorized import build, encode_graph
 from .common import geomean, write_csv
 
 
@@ -28,7 +28,8 @@ def run(fast=True):
         g = make_graph(gname, seed=0)
         spec = encode_graph(g)
         for netmodel in ("simple", "maxmin"):
-            run_fn = jax.jit(make_simulator(spec, W, cores, netmodel))
+            run_fn = jax.jit(build(spec, n_workers=W, cores=cores,
+                                   netmodel=netmodel))
             for seed in range(2 if fast else 5):
                 rng = random.Random(seed)
                 assign = {t: rng.randrange(W) for t in g.tasks}
@@ -40,7 +41,7 @@ def run(fast=True):
                     bandwidth=100 * MiB, msd=0.0).run()
                 a = np.array([assign[t] for t in g.tasks], np.int32)
                 p = np.array([prios[t] for t in g.tasks], np.float32)
-                ms, _, ok = run_fn(a, p, bandwidth=100.0 * MiB)
+                ms, _, ok = run_fn(a, p, bandwidth=100.0 * MiB)[:3]
                 assert bool(ok), (gname, netmodel, seed)
                 rel = abs(float(ms) - rep.makespan) / rep.makespan
                 errs.append(max(rel, 1e-9))
@@ -53,7 +54,7 @@ def run(fast=True):
     # throughput: batch of 64 random schedules through vmap
     g = make_graph("crossv", seed=0)
     spec = encode_graph(g)
-    run_fn = make_simulator(spec, W, cores, "maxmin")
+    run_fn = build(spec, n_workers=W, cores=cores)
     B = 16 if fast else 64
     rng = np.random.default_rng(0)
     A = rng.integers(0, W, (B, spec.T)).astype(np.int32)

@@ -29,6 +29,14 @@ point-wise:
   ``S = DOWNLOAD_SLOTS * W`` in its event loop, and no ``float32[E]``
   per-edge carry may survive (that is the legacy O(E) state the pool
   replaced).
+* JX106 — ready-frontier bounds (DESIGN.md §3): frontier targets must
+  carry the ``int32[CT]`` task frontier (and, in slot mode, the
+  ``int32[CF]`` flow-candidate frontier) with ``(CF, CT) =
+  frontier_caps_for(shape)``, and a frontier slot-mode loop may not
+  carry *any* ``[E]``-shaped state — the frontier+slot combination is
+  exactly the mode whose event loop owns no per-edge arrays.  Checked
+  on a dedicated bucket shape where the derived caps collide with no
+  other axis, so carry classification by shape cannot alias.
 """
 from __future__ import annotations
 
@@ -43,7 +51,7 @@ from ..core.vectorized.sim import (DOWNLOAD_SLOTS, make_bucket_simulator,
 from ..core.vectorized.scheduling import (VEC_SCHEDULERS,
                                           make_bucket_scheduler)
 from ..core.vectorized.specs import (_BSPEC_FIELDS, BucketedGraphSpec,
-                                     abstract_spec)
+                                     abstract_spec, frontier_caps_for)
 
 _BAD_DTYPES = ("float64", "complex128")
 
@@ -59,6 +67,7 @@ class Target:
     required_live: frozenset    # leaf names that must appear in an eqn
     slot_pool: int | None = None       # expected S for slot-mode targets
     n_edges: int | None = None         # bucket E (for the banned f32[E] carry)
+    frontier_caps: tuple | None = None  # expected (CF, CT) for frontier mode
 
 
 # ---------------------------------------------------------------- walking
@@ -224,6 +233,37 @@ def check_target(target: Target):
                 "JX105", loc,
                 f"no while carry holds the int32[{S}]/float32[{S}] "
                 f"flow-slot pool (expected S = DOWNLOAD_SLOTS*W = {S})"))
+
+    # JX106: bounded frontier lists present; frontier+slot loops carry
+    # no [E]-shaped state at all
+    if target.frontier_caps is not None:
+        CF, CT = target.frontier_caps
+        E = target.n_edges
+        want = {("int32", (CT,))}
+        if target.slot_pool is not None:
+            want.add(("int32", (CF,)))
+        found = set()
+        for path, eqn in iter_eqns(closed):
+            if eqn.primitive.name != "while":
+                continue
+            for vin, _vout in _loop_carries(eqn):
+                aval = vin.aval
+                key = (str(getattr(aval, "dtype", "")),
+                       tuple(getattr(aval, "shape", ())))
+                if key in want:
+                    found.add(key)
+                if (target.slot_pool is not None and E
+                        and key[1] == (E,)):
+                    findings.append(Finding(
+                        "JX106", loc,
+                        f"{_aval_str(aval)} per-edge carry at {path} in a "
+                        f"frontier slot-mode target — the O(E) loop state "
+                        f"the ready frontier replaced"))
+        for dt, shp in sorted(want - found):
+            findings.append(Finding(
+                "JX106", loc,
+                f"no while carry holds the {dt}[{shp[0]}] frontier list "
+                f"(frontier_caps_for derived CF={CF}, CT={CT})"))
     return findings
 
 
@@ -322,6 +362,61 @@ def default_targets(n_workers: int = 4, shape=(32, 64, 96)):
                 required_live=_dynamic_live(sched),
                 slot_pool=S if netmodel == "maxmin" else None,
                 n_edges=E))
+
+    # frontier grid (JX106): traced again on a bucket shape where the
+    # derived caps (CF=512, CT=320) are distinct from every other axis
+    # (T=1280, O=192, E=2048, S=16, O*W=768), so [cap]-shaped carries
+    # cannot alias [T]/[E] state.  The survey-grid targets above
+    # exercise the frontier path too (it is the default), but at
+    # (32, 64, 96) the caps equal T and E and the bound is unfalsifiable.
+    fr_shape = (1280, 192, 2048)
+    Tf, Of, Ef = fr_shape
+    fr_spec = abstract_spec(fr_shape)
+    fr_caps = frontier_caps_for(fr_shape)
+    for netmodel in ("maxmin", "simple"):
+        run = make_bucket_simulator(W, None, netmodel, max_cores=4)
+        targets.append(Target(
+            name=f"make_bucket_simulator[{netmodel},frontier@T{Tf}]",
+            fn=run,
+            args=(fr_spec, sds((Tf,), i32), sds((Tf,), f32), None, None,
+                  scalar_f, cores),
+            argnames=("bspec", "assignment", "priority", "durations",
+                      "sizes", "bandwidth", "cores"),
+            required_live=_STATIC_SIM_LIVE,
+            slot_pool=S if netmodel == "maxmin" else None,
+            n_edges=Ef, frontier_caps=fr_caps))
+    fr_dyn_args = (fr_spec, sds((Tf,), f32), sds((Of,), f32), scalar_f,
+                   scalar_f, scalar_f, scalar_i, cores)
+    for sched, netmodel in (("blevel", "maxmin"), ("greedy", "maxmin"),
+                            ("blevel", "simple")):
+        run = make_bucket_dynamic_simulator(W, None, sched, netmodel,
+                                            max_cores=4)
+        targets.append(Target(
+            name=(f"make_bucket_dynamic_simulator"
+                  f"[{sched},{netmodel},frontier@T{Tf}]"),
+            fn=run, args=fr_dyn_args, argnames=dyn_names,
+            required_live=_dynamic_live(sched),
+            slot_pool=S if netmodel == "maxmin" else None,
+            n_edges=Ef, frontier_caps=fr_caps))
+
+    # the frontier=False escape hatch must keep tracing with the PR-4
+    # carry contract (slot pool present, no f32[E] in slot mode)
+    run = make_bucket_simulator(W, None, "maxmin", max_cores=4,
+                                frontier=False)
+    targets.append(Target(
+        name="make_bucket_simulator[maxmin,frontier=off]",
+        fn=run,
+        args=(spec, sds((T,), i32), sds((T,), f32), None, None,
+              scalar_f, cores),
+        argnames=("bspec", "assignment", "priority", "durations",
+                  "sizes", "bandwidth", "cores"),
+        required_live=_STATIC_SIM_LIVE, slot_pool=S, n_edges=E))
+    run = make_bucket_dynamic_simulator(W, None, "blevel", "maxmin",
+                                        max_cores=4, frontier=False)
+    targets.append(Target(
+        name="make_bucket_dynamic_simulator[blevel,maxmin,frontier=off]",
+        fn=run, args=dyn_args, argnames=dyn_names,
+        required_live=_dynamic_live("blevel"), slot_pool=S, n_edges=E))
 
     sched_args = (spec, sds((T,), f32), sds((O,), f32), scalar_f,
                   scalar_i, cores)

@@ -32,6 +32,9 @@ RULES = {
     "JX105": "flow-slot pool bound violated (no int32[DOWNLOAD_SLOTS*W] "
              "slot state in the event-loop carry, or a per-edge f32[E] "
              "carry survives in slot mode)",
+    "JX106": "frontier bound violated (no int32 frontier list sized by "
+             "frontier_caps_for in the event-loop carry, or a per-edge "
+             "[E] carry resurfaces in a frontier slot-mode target)",
     "PY201": "float()/int()/bool() on a potential tracer in traced code "
              "(concretizes; breaks under jit/vmap)",
     "PY202": "numpy call inside traced code (constant-folds at trace "

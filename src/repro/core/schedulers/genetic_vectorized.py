@@ -42,7 +42,7 @@ class GeneticVectorizedScheduler(SchedulerBase):
         self._assigned = True
         import jax
         import jax.numpy as jnp
-        from ..vectorized import encode_graph, make_simulator
+        from ..vectorized import build, encode_graph
 
         view = self.view
         graph = view.graph
@@ -58,7 +58,7 @@ class GeneticVectorizedScheduler(SchedulerBase):
         prio = np.array([bl[t] for t in graph.tasks], np.float32)
 
         spec = encode_graph(graph)
-        run = make_simulator(spec, W, cores, self.netmodel)
+        run = build(spec, n_workers=W, cores=cores, netmodel=self.netmodel)
         bw = jnp.float32(self.bandwidth)
         batch_ms = jax.jit(jax.vmap(
             lambda a: run(a, jnp.asarray(prio), bandwidth=bw)[0]))

@@ -2,14 +2,17 @@
 from .specs import (GraphSpec, BucketedGraphSpec, BucketGroup, encode_graph,
                     abstract_spec, as_bucketed, bucket_shape, pad_spec,
                     pad_specs, pad_to, stack_specs, t_bucket, T_EDGES)
+from .specs import frontier_cap, frontier_caps_for
 from .sim import (make_simulator, simulate_batch,
                   make_dynamic_simulator, simulate_dynamic_grid,
                   make_bucket_simulator, make_bucket_dynamic_simulator,
                   DynamicGridRunner, BucketedGridRunner, jit_trace_count,
                   reset_trace_count, trace_counter,
-                  DOWNLOAD_SLOTS, PAIR_SLOTS)
+                  DOWNLOAD_SLOTS, PAIR_SLOTS, SimResult)
+from .api import SimConfig, build, build_for_graph
 from .scheduling import (VEC_SCHEDULERS, make_vec_scheduler,
                          make_bucket_scheduler,
+                         bucket_ready_tasks, frontier_mask,
                          make_static_blevel_scheduler,
                          make_static_tlevel_scheduler,
                          make_static_mcp_scheduler, make_etf_scheduler,
@@ -22,13 +25,16 @@ from .waterfill import waterfill, waterfill_simple
 __all__ = ["GraphSpec", "BucketedGraphSpec", "BucketGroup", "encode_graph",
            "abstract_spec", "as_bucketed", "bucket_shape", "pad_spec",
            "pad_specs", "pad_to", "stack_specs", "t_bucket", "T_EDGES",
+           "frontier_cap", "frontier_caps_for",
            "make_simulator", "simulate_batch",
            "make_dynamic_simulator", "simulate_dynamic_grid",
            "make_bucket_simulator", "make_bucket_dynamic_simulator",
            "DynamicGridRunner", "BucketedGridRunner", "jit_trace_count",
            "reset_trace_count", "trace_counter",
-           "DOWNLOAD_SLOTS", "PAIR_SLOTS",
+           "DOWNLOAD_SLOTS", "PAIR_SLOTS", "SimResult",
+           "SimConfig", "build", "build_for_graph",
            "VEC_SCHEDULERS", "make_vec_scheduler", "make_bucket_scheduler",
+           "bucket_ready_tasks", "frontier_mask",
            "make_static_blevel_scheduler", "make_static_tlevel_scheduler",
            "make_static_mcp_scheduler", "make_etf_scheduler",
            "make_random_scheduler", "make_greedy_placer",

@@ -1,0 +1,163 @@
+"""One front door for the vectorized simulator family.
+
+``build`` normalizes the per-factory kwarg sprawl into a single entry
+point: pick static vs dynamic, bucket-form vs per-graph-bound, and
+carry every tuning knob in a frozen ``SimConfig``.  The ``make_*``
+factories in ``sim.py``/``scheduling.py`` stay as thin delegating
+wrappers; the full argument contract lives in DESIGN.md §8.
+
+    from repro.core.vectorized.api import build, SimConfig
+
+    run = build(spec, n_workers=4, cores=2)            # static sim
+    res = run(assignment, priority)                    # -> SimResult
+
+    sched = build(spec, n_workers=4, cores=2, scheduler="blevel")
+    a, p = sched(est_dur, est_size, bandwidth, seed)
+
+    dyn = build(spec, n_workers=4, cores=2, scheduler="greedy",
+                dynamic=True, config=SimConfig(msd=1.0))
+    res = dyn(est_dur, est_size)                       # msd baked in
+
+``spec=None`` returns the late-bound bucket form (the spec becomes the
+first traced argument) — what ``BucketedGridRunner`` and the survey
+compile once per shape bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+import numpy as np
+
+from .specs import GraphSpec, as_bucketed, frontier_caps_for_spec
+from . import sim as _sim
+from . import scheduling as _scheduling
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Frozen bundle of every simulator/scheduler option ``build``
+    accepts (hashable, so configs can key caches).  ``flow_slots`` /
+    ``frontier`` are tri-state like the factory kwargs (``None`` =
+    default-on where supported, DESIGN.md §3); ``msd`` /
+    ``decision_delay`` / ``imode`` / ``seed`` become the *default*
+    call arguments of a bound dynamic run — each can still be
+    overridden per call or swept under ``vmap``."""
+
+    flow_slots: bool | None = None
+    frontier: bool | None = None
+    frontier_caps: tuple[int, int] | None = None
+    waterfill_impl: str = "auto"
+    flow_rounds: int = 4
+    max_steps: int | None = None
+    msd: float = 0.0
+    decision_delay: float = 0.0
+    imode: str = "exact"
+    seed: int = 0
+
+    def replace(self, **kwargs) -> "SimConfig":
+        return dataclasses.replace(self, **kwargs)
+
+
+def _merge_config(config, opts) -> SimConfig:
+    cfg = SimConfig() if config is None else config
+    if opts:
+        unknown = set(opts) - {f.name for f in dataclasses.fields(SimConfig)}
+        if unknown:
+            raise TypeError(f"build() got unknown option(s) "
+                            f"{sorted(unknown)}; SimConfig fields are "
+                            f"{sorted(f.name for f in dataclasses.fields(SimConfig))}")
+        cfg = cfg.replace(**opts)
+    return cfg
+
+
+def build(spec=None, *, n_workers: int, cores=None, scheduler=None,
+          netmodel: str = "maxmin", dynamic: bool = False,
+          max_cores: int | None = None, config: SimConfig | None = None,
+          **opts):
+    """Build a simulator or scheduler callable (DESIGN.md §8).
+
+    Dispatch:
+
+    * ``scheduler=None`` (default) — the **static simulator**:
+      ``run(assignment, priority, ...) -> SimResult``.
+    * ``dynamic=True`` — the **dynamic simulator** for ``scheduler``
+      (default ``"blevel"``): ``run(est_durations, est_sizes, ...) ->
+      SimResult``.
+    * ``scheduler`` given with ``dynamic=False`` — the **static
+      schedule function**: ``schedule(est_durations, est_sizes,
+      bandwidth, seed[, cores]) -> (assignment, priority)``.
+
+    ``spec`` may be a ``GraphSpec``/``BucketedGraphSpec`` (bound now:
+    the spec argument disappears from the returned callable) or
+    ``None`` (bucket form: the callable takes the spec as its first
+    traced argument, one compile per shape bucket).  Options come from
+    ``config`` (a ``SimConfig``) and/or keyword overrides — ``build(...,
+    frontier=False)`` is shorthand for
+    ``config=SimConfig(frontier=False)``.  ``cores=None`` plus a static
+    ``max_cores`` keeps the cluster a traced call-time argument."""
+    cfg = _merge_config(config, opts)
+    bspec = None if spec is None else as_bucketed(spec)
+    if (bspec is not None and cfg.frontier is not False
+            and cfg.frontier_caps is None
+            and isinstance(bspec.n_inputs, np.ndarray)):
+        # the spec is concrete, so widen the shape-derived caps to the
+        # root count — all roots are ready at t=0 (specs.py)
+        cfg = cfg.replace(frontier_caps=frontier_caps_for_spec(bspec))
+    if bspec is not None and cores is not None:
+        # host-side guard: a task that fits no worker would stall the
+        # event loop — raise here like the reference scheduler base
+        _sim._check_cpus_fit([bspec],
+                             _sim._resolve_cores(n_workers, cores),
+                             "build")
+
+    if scheduler is not None and not dynamic:
+        fn = _scheduling.make_bucket_scheduler(n_workers, cores, scheduler,
+                                               max_cores)
+        if bspec is None:
+            return fn
+        return lambda est_dur, est_size, bandwidth, seed=jnp.int32(0), \
+            cores=None: fn(bspec, est_dur, est_size, bandwidth, seed, cores)
+
+    if dynamic:
+        brun = _sim.make_bucket_dynamic_simulator(
+            n_workers, cores, scheduler or "blevel", netmodel,
+            cfg.flow_rounds, cfg.max_steps, max_cores=max_cores,
+            flow_slots=cfg.flow_slots, frontier=cfg.frontier,
+            frontier_caps=cfg.frontier_caps,
+            waterfill_impl=cfg.waterfill_impl)
+        if bspec is None:
+            return brun
+
+        def run(est_durations, est_sizes,
+                msd=jnp.float32(cfg.msd),
+                decision_delay=jnp.float32(cfg.decision_delay),
+                bandwidth=jnp.float32(100 * 1024 * 1024),
+                seed=jnp.int32(cfg.seed), cores=None):
+            return brun(bspec, est_durations, est_sizes, msd,
+                        decision_delay, bandwidth, seed, cores)
+        return run
+
+    brun = _sim.make_bucket_simulator(
+        n_workers, cores, netmodel, cfg.flow_rounds, cfg.max_steps,
+        max_cores=max_cores, flow_slots=cfg.flow_slots,
+        frontier=cfg.frontier, frontier_caps=cfg.frontier_caps,
+        waterfill_impl=cfg.waterfill_impl)
+    if bspec is None:
+        return brun
+
+    def run(assignment, priority, durations=None, sizes=None,
+            bandwidth=jnp.float32(100 * 1024 * 1024), cores=None):
+        return brun(bspec, assignment, priority, durations, sizes,
+                    bandwidth, cores)
+    return run
+
+
+def build_for_graph(graph, **kwargs):
+    """``build`` for a ``TaskGraph``: encodes the graph first."""
+    from .specs import encode_graph
+    return build(encode_graph(graph), **kwargs)
+
+
+__all__ = ["SimConfig", "build", "build_for_graph", "GraphSpec"]

@@ -413,14 +413,52 @@ def make_bucket_scheduler(n_workers, cores, name, max_cores=None):
 
 
 def make_vec_scheduler(spec, n_workers, cores, name):
-    """Legacy per-graph factory: bind ``spec`` now, return
+    """Deprecated per-graph factory — use
+    ``repro.core.vectorized.api.build(spec, scheduler=name)``
+    (DESIGN.md §8).  Binds ``spec`` now and returns
     ``schedule(est_durations, est_sizes, bandwidth, seed) ->
-    (assignment i32[T], priority f32[T])``, directly consumable by
-    ``make_simulator`` and used internally by ``make_dynamic_simulator``."""
+    (assignment i32[T], priority f32[T])``."""
+    import warnings
+    warnings.warn(
+        "make_vec_scheduler is deprecated; use "
+        "repro.core.vectorized.api.build(spec, scheduler=...) "
+        "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
     b = as_bucketed(spec)
     fn = make_bucket_scheduler(n_workers, cores, name)
     return lambda est_dur, est_size, bandwidth, seed=jnp.int32(0): \
         fn(b, est_dur, est_size, bandwidth, seed)
+
+
+def frontier_mask(frontier, n):
+    """Expand a bounded frontier (``i32[C]``, ``-1`` = empty slot) into
+    a dense ``bool[n]`` membership mask — the bridge between the
+    simulator's carried candidate lists (DESIGN.md §3) and mask-shaped
+    consumers like the schedulers."""
+    return (jnp.zeros(n, bool)
+            .at[jnp.clip(frontier, 0)].max(frontier >= 0))
+
+
+def bucket_ready_tasks(bspec, t_done=None, t_started=None, frontier=None):
+    """Mask-aware ready set: valid tasks whose produced-input count
+    meets ``n_inputs`` (and that haven't started, when ``t_started`` is
+    given).  Fed a ``frontier`` (the simulator's carried ``i32[CT]``
+    enabled list), the O(E) edge scatter collapses to expanding the
+    bounded list; otherwise it is recomputed from ``t_done``."""
+    bspec = as_jax(bspec)
+    if frontier is not None:
+        ready = frontier_mask(frontier, bspec.T)
+    else:
+        if t_done is None:
+            raise ValueError("bucket_ready_tasks needs t_done when no "
+                             "frontier is given")
+        prod_e = (t_done[bspec.producer[bspec.edge_obj]]
+                  & bspec.edge_valid)
+        cnt = (jnp.zeros(bspec.T, jnp.int32)
+               .at[bspec.edge_task].add(prod_e.astype(jnp.int32)))
+        ready = cnt >= bspec.n_inputs
+    if t_started is not None:
+        ready = ready & ~t_started
+    return ready & bspec.task_valid
 
 
 def _bind(bucket_factory):

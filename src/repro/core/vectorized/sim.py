@@ -60,12 +60,16 @@ in DESIGN.md §3.
 """
 from __future__ import annotations
 
+import typing
+import warnings
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from .specs import (GraphSpec, encode_graph, as_bucketed, as_jax,
-                    bucket_shape, pad_spec, pad_to, stack_specs)
+                    bucket_shape, frontier_caps_for, pad_spec, pad_to,
+                    stack_specs)
 from .waterfill import waterfill
 from .scheduling import (bucket_blevel, bucket_transfer_costs,
                          make_bucket_greedy_placer, make_bucket_scheduler,
@@ -85,6 +89,73 @@ NEG_TIME = jnp.float32(-1e30)
 # integration and next-event reduction run over [S] instead of [E].
 DOWNLOAD_SLOTS = 4
 PAIR_SLOTS = 2
+
+
+class SimResult(typing.NamedTuple):
+    """Uniform result of every simulator path (static, dynamic,
+    bucketed) — a pytree, so it vmaps/jits like the old tuples.
+
+    ``makespan`` is NaN whenever ``ok`` is False.  ``overflow`` is the
+    honest-failure flag of the bounded carries (flow-slot pool or ready
+    frontier, DESIGN.md §3): capacity was exceeded, results are invalid,
+    and ``ok`` is already poisoned — widen ``frontier_caps`` or fall
+    back to ``frontier=False``.  ``n_events`` counts processed
+    completions (tasks + flows); ``n_steps`` counts ``while_loop``
+    iterations.  Same-timestamp completions are batched into one step,
+    so ``n_events / n_steps`` is the measured event-batching factor."""
+    makespan: jnp.ndarray      # f32
+    transferred: jnp.ndarray   # f32 — bytes moved across workers
+    ok: jnp.ndarray            # bool
+    overflow: jnp.ndarray      # bool
+    n_events: jnp.ndarray      # i32
+    n_steps: jnp.ndarray       # i32
+
+
+def _frontier_append(fr, new_mask, ids):
+    """Append ``ids[new_mask]`` into the free (``-1``) slots of the
+    bounded frontier ``fr``; returns ``(fr, overflowed)``.
+
+    Candidates fill free slots in index order, both sides ranked by
+    cumsum.  Formulated as a *gather*: each free slot binary-searches
+    the candidates' running count for its own rank (a full-width
+    scatter here costs ~40us of fixed XLA:CPU overhead per event —
+    this is a couple of vector ops plus log(N) gathers).
+    ``overflowed`` is True when candidates outnumbered free slots —
+    the caller folds it into ``ok`` so a too-small derived capacity
+    fails loudly instead of silently dropping work."""
+    if fr.shape[0] == 0 or ids.shape[0] == 0:       # degenerate axis
+        return fr, jnp.any(new_mask)
+    free = fr < 0
+    free_rank = jnp.cumsum(free.astype(jnp.int32))          # 1-based
+    cs = jnp.cumsum(new_mask.astype(jnp.int32))             # 1-based
+    total_new = cs[-1]
+    # first candidate index whose running count reaches the slot's rank
+    # == the rank-th new candidate (cs jumps to that rank at its index)
+    src = jnp.searchsorted(cs, free_rank, side="left")
+    take = free & (free_rank <= total_new)
+    src_c = jnp.clip(src, 0, ids.shape[0] - 1)
+    fr = jnp.where(take, ids[src_c].astype(jnp.int32), fr)
+    overflowed = total_new > free_rank[-1]
+    return fr, overflowed
+
+
+def _resolve_frontier(frontier, *, simple: bool, use_slots: bool,
+                      dynamic: bool) -> bool:
+    """The ``frontier`` kwarg tri-state: ``None`` defaults on wherever
+    supported, mirroring the ``flow_slots`` rollout.  The dynamic
+    max-min frontier derives in-flight state from the slot pool, so it
+    requires ``flow_slots``; asking for both explicitly is an error,
+    while the default quietly stays on the per-edge baseline."""
+    if frontier is False:
+        return False
+    if dynamic and not simple and not use_slots:
+        if frontier is True:
+            raise ValueError(
+                "frontier=True requires flow_slots on the dynamic max-min "
+                "path (in-flight flow state is derived from the slot "
+                "pool); drop flow_slots=False or pass frontier=False")
+        return False
+    return True
 
 
 def _resolve_waterfill_impl(waterfill_impl: str) -> str:
@@ -114,32 +185,44 @@ def _make_waterfill(waterfill_impl: str):
                                                     caps, caps)
 
 
-def _acquire_slots(st, pick, dst_e, src_e, bytes_e, W):
+def _acquire_slots(st, pick, dst_e, src_e, bytes_e, W, ids=None):
     """Move this round's picked flows (<= 1 per destination worker —
     ``_pick_per_bucket``'s contract) into the flow-slot pool: each
     destination worker owns ``DOWNLOAD_SLOTS`` consecutive slots, and a
     picked flow takes the first free one.  Eligibility already enforced
     occupancy < DOWNLOAD_SLOTS, so a free slot must exist; ``overflow``
-    records any violation of that invariant and poisons ``ok``."""
+    records any violation of that invariant and poisons ``ok``.
+
+    ``pick``/``dst_e``/``src_e``/``bytes_e`` may be per-edge ``[E]`` or
+    per-frontier-candidate ``[CF]`` arrays; in the latter case ``ids``
+    supplies the real edge id per candidate (``slot_edge`` always stores
+    edge ids, whatever the pick axis)."""
     E = pick.shape[0]
     e_ids = jnp.arange(E, dtype=jnp.int32)
-    # the (single) picked edge per destination worker, -1 where none
-    pe = (jnp.full(W, -1, jnp.int32)
-          .at[dst_e].max(jnp.where(pick, e_ids, -1)))
+    if ids is None:
+        ids = e_ids
+    # the (single) picked entry per destination worker, -1 where none —
+    # dense per-bucket max, not a scatter (see _bucket_max)
+    onehot = dst_e[:, None] == jnp.arange(W, dtype=dst_e.dtype)[None, :]
+    pe = jnp.max(jnp.where(onehot & pick[:, None], e_ids[:, None], -1),
+                 initial=-1,
+                 axis=0)
     occ_w = (st["slot_edge"] >= 0).reshape(W, DOWNLOAD_SLOTS)
     first_free = jnp.argmin(occ_w.astype(jnp.int32), axis=1)
     has_free = ~jnp.all(occ_w, axis=1)
     take = (pe >= 0) & has_free
-    idx = jnp.arange(W, dtype=jnp.int32) * DOWNLOAD_SLOTS + first_free
     pe_c = jnp.clip(pe, 0)
+    # dense slot write: slot (w, first_free[w]) takes worker w's pick
+    put = ((jnp.arange(DOWNLOAD_SLOTS)[None, :] == first_free[:, None])
+           & take[:, None]).reshape(-1)
+    def spread(v):
+        return jnp.broadcast_to(v[:, None],
+                                (W, DOWNLOAD_SLOTS)).reshape(-1)
     return dict(
         st,
-        slot_edge=st["slot_edge"].at[idx].set(
-            jnp.where(take, pe_c, st["slot_edge"][idx])),
-        slot_src=st["slot_src"].at[idx].set(
-            jnp.where(take, src_e[pe_c], st["slot_src"][idx])),
-        slot_rem=st["slot_rem"].at[idx].set(
-            jnp.where(take, bytes_e[pe_c], st["slot_rem"][idx])),
+        slot_edge=jnp.where(put, spread(ids[pe_c]), st["slot_edge"]),
+        slot_src=jnp.where(put, spread(src_e[pe_c]), st["slot_src"]),
+        slot_rem=jnp.where(put, spread(bytes_e[pe_c]), st["slot_rem"]),
         overflow=st["overflow"] | jnp.any((pe >= 0) & ~has_free),
     )
 
@@ -195,40 +278,30 @@ class trace_counter:
 def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
                           flow_rounds: int = 4, max_steps: int | None = None, *,
                           max_cores: int | None = None, flow_slots=None,
-                          waterfill_impl: str = "auto",
-                          return_steps: bool = False):
+                          frontier=None, frontier_caps=None,
+                          waterfill_impl: str = "auto"):
     """Returns ``run(bspec, assignment, priority, durations, sizes,
-    bandwidth, cores) -> (makespan, transferred_bytes, ok)`` — a pure
-    JAX function with the graph late-bound as a ``BucketedGraphSpec``.
+    bandwidth, cores) -> SimResult`` — a pure JAX function with the
+    graph late-bound as a ``BucketedGraphSpec``.  Thin-wrapper note:
+    prefer the ``repro.core.vectorized.api.build`` front door; the full
+    argument contract lives in DESIGN.md §8 and the carry invariants in
+    DESIGN.md §3.
 
-    ``assignment``: i32[T] worker per task (every entry must be a valid
-    worker index, padded entries included — their value is ignored);
-    ``priority``: f32[T] (blocking == priority, the default used by
-    every bundled scheduler).  ``durations``/``sizes`` override the
-    spec's (pass None normally) so sweeps/imodes/GA can batch them;
-    ``bandwidth`` is a f32 scalar.  ``ok`` is False (and makespan NaN)
-    when the ``max_steps`` event budget ran out before every valid task
-    finished — e.g. an assignment whose tasks can never start —
-    or (flow-slot path) on a slot-pool overflow, which the Appendix-A
-    limits make impossible by construction; ``simulate_batch`` turns
-    that into an error.
+    ``frontier`` (default on; ``False`` = the retained per-edge-scan
+    baseline, the parity reference) compacts per-event eligibility onto
+    bounded ready frontiers carried in the loop: candidate flows
+    (``i32[CF]``) and enabled-not-started tasks (``i32[CT]``), with
+    capacities derived per bucket by ``specs.frontier_caps_for`` or
+    overridden via ``frontier_caps=(CF, CT)``.  The flow/task pick
+    rounds then touch O(frontier) entries instead of O(E)/O(T), and
+    with ``flow_slots`` the loop carries no per-edge state at all.  A
+    frontier overflow poisons ``ok`` (``SimResult.overflow`` — honest
+    failure, never silent truncation).
 
-    The cluster may be late-bound too: build with ``cores=None`` plus a
-    static ``max_cores`` bound and pass the per-worker ``cores: i32[W]``
-    vector at call time — it is traced, so one compiled program serves
-    every same-W cluster signature (zero-core entries = padded, absent
-    workers).
-
-    Under the max-min model the network state rides the bounded
-    *flow-slot pool* (``S = DOWNLOAD_SLOTS * W`` slots, DESIGN.md §3):
-    the waterfill, rate integration and next-event reduction cost O(S)
-    per event instead of O(E).  ``flow_slots=False`` keeps the legacy
-    per-edge ``f32[E]`` state (the parity baseline, and what the simple
-    model — no slot limits — always uses).  ``waterfill_impl`` routes
-    the max-min solver: ``"jnp"`` progressive filling, ``"pallas"`` the
-    MXU kernel via ``kernels.ops``, ``"auto"`` pallas iff on TPU.
-    ``return_steps=True`` appends the executed event count to the
-    return tuple (benchmark instrumentation).
+    ``flow_slots=False`` keeps the legacy per-edge ``f32[E]`` network
+    state; ``waterfill_impl`` routes the max-min solver (``"jnp"`` |
+    ``"pallas"`` | ``"auto"``); ``cores=None`` + ``max_cores`` makes
+    the cluster a traced call-time argument.
     """
     W = n_workers
     cores_default = _resolve_cores(n_workers, cores)
@@ -239,6 +312,8 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
     max_cores = max(int(max_cores), 1)
     simple = netmodel == "simple"
     use_slots_cfg = (flow_slots is not False) and not simple
+    use_frontier = _resolve_frontier(frontier, simple=simple,
+                                     use_slots=use_slots_cfg, dynamic=False)
     wf = None if simple else _make_waterfill(waterfill_impl)
     S = W * DOWNLOAD_SLOTS
     slot_dst = jnp.arange(S, dtype=jnp.int32) // DOWNLOAD_SLOTS
@@ -284,6 +359,12 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
         needed = cross & is_rep
         f_bytes = jnp.where(edge_valid, sizes[e_obj], 0.0)
         pair = f_src * W + f_dst
+        if frontier_caps is None:
+            CF, CT = frontier_caps_for((T, O, E))
+        else:
+            # an explicit override never exceeds the axis itself
+            CF, CT = min(frontier_caps[0], E), min(frontier_caps[1], T)
+        t_ids = jnp.arange(T, dtype=jnp.int32)
 
         state0 = dict(
             now=jnp.float32(0.0),
@@ -291,10 +372,14 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
             t_done=~task_valid,
             t_finish=jnp.full(T, jnp.inf, jnp.float32),
             free=cores_j.astype(jnp.int32),
-            f_started=jnp.zeros(E, bool),
-            f_done=jnp.zeros(E, bool),
             steps=jnp.int32(0),
+            n_events=jnp.int32(0),
         )
+        if not (use_frontier and use_slots):
+            # frontier + slots is the no-per-edge-carry mode: flow
+            # identity lives in the slot pool, satisfaction in sat_cnt
+            state0.update(f_started=jnp.zeros(E, bool),
+                          f_done=jnp.zeros(E, bool))
         if use_slots:
             # in-flight flow state lives in the compact slot pool; the
             # per-edge f32[E] remaining-bytes carry disappears entirely
@@ -306,6 +391,18 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
             )
         else:
             state0["f_rem"] = f_bytes
+        if use_frontier:
+            state0.setdefault("overflow", jnp.bool_(False))
+            fr_task0, ov0 = _frontier_append(jnp.full(CT, -1, jnp.int32),
+                                             (n_inputs <= 0) & task_valid,
+                                             t_ids)
+            state0.update(sat_cnt=jnp.zeros(T, jnp.int32), fr_task=fr_task0,
+                          overflow=state0["overflow"] | ov0)
+            if not simple:
+                state0.update(in_cnt=jnp.zeros(T, jnp.int32),
+                              fr_flow=jnp.full(CF, -1, jnp.int32))
+            if use_slots:
+                state0["transferred"] = jnp.float32(0.0)
 
         def edge_satisfied(st):
             """input edge e is satisfied at the consumer's worker."""
@@ -378,6 +475,114 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
                 )
             return st
 
+        def start_flows_frontier(st):
+            """Max-min flow picks over the bounded candidate list.  The
+            download priority stays *exact*: one O(E) scatter-max into
+            the (obj, dst) key space per event, gathered only at the CF
+            candidates — the key max ranges over all same-key edges,
+            frontier members or not, exactly like the baseline."""
+            ready_t = st["in_cnt"] >= n_inputs
+            raw = jnp.where(edge_valid,
+                            prio_e + READY_BOOST
+                            * ready_t[e_task].astype(jnp.float32), NEG)
+            keymax = jnp.full(O * W, NEG, jnp.float32).at[key].max(raw)
+            fr = st["fr_flow"]
+            cid = jnp.clip(fr, 0)
+            alive = fr >= 0
+            c_dst = f_dst[cid]
+            c_src = f_src[cid]
+            c_pair = c_src * W + c_dst
+            c_prio = keymax[key[cid]]
+            c_bytes = f_bytes[cid]
+            # the baseline breaks priority ties by smallest edge id;
+            # frontier slot order is arrival order, so the id rides
+            # along as an explicit key
+            neg_id = -fr.astype(jnp.float32)
+            pair_ids = jnp.arange(W * W, dtype=jnp.int32)
+            if use_slots:
+                occ = st["slot_edge"] >= 0
+                dcnt = (occ.reshape(W, DOWNLOAD_SLOTS)
+                        .sum(axis=1, dtype=jnp.int32))
+                pair_s = st["slot_src"] * W + slot_dst
+                pcnt = jnp.sum((pair_s[:, None] == pair_ids[None, :])
+                               & occ[:, None], axis=0, dtype=jnp.int32)
+            else:
+                af = (st["f_started"] & ~st["f_done"]).astype(jnp.int32)
+                dcnt = jnp.zeros(W, jnp.int32).at[f_dst].add(af * needed)
+                pcnt = jnp.zeros(W * W, jnp.int32).at[pair].add(af * needed)
+            alive0 = alive
+            onehot_w = c_dst[:, None] == jnp.arange(W,
+                                                    dtype=jnp.int32)[None, :]
+            for _ in range(flow_rounds):
+                eligible = (alive & (dcnt[c_dst] < DOWNLOAD_SLOTS)
+                            & (pcnt[c_pair] < PAIR_SLOTS))
+                pick = _pick_per_bucket(c_dst, W, eligible, c_prio, neg_id)
+                if use_slots:
+                    st = _acquire_slots(st, pick, c_dst, c_src, c_bytes, W,
+                                        ids=fr)
+                # occupancy moves only by this event's own picks
+                # (completions happen at the end of the body); the picks
+                # compact to one pair per worker, so the count deltas
+                # are W-wide dense reduces, not scatters
+                pw_pair = jnp.max(jnp.where(onehot_w & pick[:, None],
+                                            c_pair[:, None], -1), axis=0,
+                                  initial=-1)
+                picked_w = pw_pair >= 0
+                dcnt = dcnt + picked_w.astype(jnp.int32)
+                pcnt = pcnt + jnp.sum((pw_pair[:, None] == pair_ids[None, :])
+                                      & picked_w[:, None], axis=0,
+                                      dtype=jnp.int32)
+                alive = alive & ~pick
+            picked = alive0 & ~alive
+            if not use_slots:
+                # one deferred scatter for all rounds' starts
+                st = dict(st, f_started=st["f_started"].at[
+                    jnp.where(picked, fr, E)].set(True, mode="drop"))
+            return dict(st, fr_flow=jnp.where(picked, -1, fr))
+
+        def start_tasks_frontier(st):
+            """Appendix-A start rounds over the bounded enabled-task
+            list — the frontier invariantly holds exactly the enabled &
+            not-started tasks, so blocking/eligibility match the full
+            [T] scan; ``-task_id`` reproduces the baseline tie-break."""
+            fr = st["fr_task"]
+            tid = jnp.clip(fr, 0)
+            alive0 = fr >= 0
+            alive = alive0
+            c_w = assignment[tid]
+            c_cpus = cpus[tid]
+            c_prio = priority[tid]
+            c_fin = durations[tid]
+            neg_id = -fr.astype(jnp.float32)
+            free = st["free"]
+            onehot_w = c_w[:, None] == jnp.arange(W,
+                                                  dtype=jnp.int32)[None, :]
+            for _ in range(max_cores):
+                free_at = free[c_w]
+                blocked = alive & (c_cpus > free_at)
+                maxblk = _bucket_max(onehot_w,
+                                     jnp.where(blocked, c_prio, NEG))
+                cand = (alive & (c_cpus <= free_at)
+                        & (c_prio >= maxblk[c_w]))
+                pick = _pick_per_bucket(c_w, W, cand, c_prio, neg_id)
+                # <= 1 pick per worker, so the core delta per worker is
+                # a dense masked max, not a scatter-add
+                free = free - jnp.max(jnp.where(onehot_w & pick[:, None],
+                                                c_cpus[:, None], 0), axis=0,
+                                      initial=0)
+                alive = alive & ~pick
+            # time does not advance between rounds, so all rounds' starts
+            # share one finish-time value and fold into one scatter each
+            newly = alive0 & ~alive
+            dest = jnp.where(newly, fr, T)
+            return dict(st,
+                        t_started=st["t_started"].at[dest].set(True,
+                                                               mode="drop"),
+                        t_finish=st["t_finish"].at[dest].set(
+                            st["now"] + c_fin, mode="drop"),
+                        free=free,
+                        fr_task=jnp.where(newly, -1, fr))
+
         def rates_of(st):
             if simple:
                 active = st["f_started"] & ~st["f_done"] & needed
@@ -423,7 +628,10 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
             free = st["free"] + jnp.zeros(W, jnp.int32).at[assignment].add(
                 jnp.where(t_newly, cpus, 0))
             st = dict(st, now=now, t_done=st["t_done"] | t_newly, free=free,
-                      steps=st["steps"] + 1)
+                      steps=st["steps"] + 1,
+                      n_events=st["n_events"]
+                      + jnp.sum(t_newly.astype(jnp.int32))
+                      + jnp.sum(done_now.astype(jnp.int32)))
             if use_slots:
                 # completion flags scatter back per edge; finished slots
                 # release immediately (free for next event's acquires)
@@ -435,20 +643,120 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
                             f_done=st["f_done"] | newly_done)
             return dict(st, f_rem=rem, f_done=st["f_done"] | done_now)
 
-        def cond(st):
-            return (~jnp.all(st["t_done"])) & (st["steps"] < steps_cap)
+        def body_frontier(st):
+            if not simple:
+                st = start_flows_frontier(st)
+            st = start_tasks_frontier(st)
+            rates = rates_of(st)
+            running = st["t_started"] & ~st["t_done"]
+            t_next = jnp.min(jnp.where(running, st["t_finish"], jnp.inf))
+            gran = st["now"] * 6e-7 + TIME_EPS
+            if use_slots:
+                active = st["slot_edge"] >= 0
+                rem = st["slot_rem"]
+            else:
+                active = st["f_started"] & ~st["f_done"] & needed
+                rem = st["f_rem"]
+            # double-where: see `body` — rate-0 lanes must not divide
+            safe_rates = jnp.where(rates > 0, rates, 1.0)
+            f_eta = jnp.where(active & (rates > 0), rem / safe_rates,
+                              jnp.inf)
+            f_eta = jnp.where(f_eta <= gran, 0.0, f_eta)
+            f_next = st["now"] + jnp.min(f_eta, initial=jnp.inf)
+            nxt = jnp.minimum(t_next, f_next)
+            nxt = jnp.maximum(nxt, st["now"])          # never go back
+            dt = jnp.where(jnp.isfinite(nxt), nxt - st["now"], 0.0)
+            now = jnp.where(jnp.isfinite(nxt), nxt, st["now"])
+            rem = jnp.where(active, rem - rates * dt, rem)
+            done_now = active & ((rem <= BYTES_EPS) | (rem <= rates * gran))
+            t_newly = running & (st["t_finish"] <= now + TIME_EPS)
+            # released cores per worker as a dense [T, W] reduce (the
+            # onehot is loop-invariant; an .at[assignment].add scatter
+            # here costs ~10x more on XLA:CPU)
+            free = st["free"] + jnp.sum(
+                jnp.where(onehot_aw & t_newly[:, None], cpus[:, None], 0),
+                axis=0, dtype=jnp.int32)
+            st = dict(st, now=now, t_done=st["t_done"] | t_newly, free=free,
+                      steps=st["steps"] + 1,
+                      n_events=st["n_events"]
+                      + jnp.sum(t_newly.astype(jnp.int32))
+                      + jnp.sum(done_now.astype(jnp.int32)))
+            if use_slots:
+                se = st["slot_edge"]
+                sec = jnp.clip(se, 0)
+                # per-edge completion view for this event only —
+                # satisfaction is folded into sat_cnt, so no f_done
+                # carry survives
+                newly_done_e = jnp.zeros(E, bool).at[sec].max(done_now)
+                st = dict(st, slot_rem=rem,
+                          slot_edge=jnp.where(done_now, -1, se),
+                          transferred=st["transferred"]
+                          + jnp.sum(jnp.where(done_now, f_bytes[sec], 0.0)))
+            else:
+                newly_done_e = done_now
+                st = dict(st, f_rem=rem, f_done=st["f_done"] | done_now)
+                if simple:
+                    # no slot limits: produced flows start immediately
+                    # (active from the next event on, like the baseline
+                    # start at the top of the next body)
+                    new_flow = needed & t_newly[prod_task_e]
+                    st = dict(st, f_started=st["f_started"] | new_flow)
+            # frontier maintenance: fold this event's completions into
+            # the incremental counts, then append the new candidates
+            moved_sat = cross & newly_done_e[rep]
+            local_sat = t_newly[prod_task_e] & ~cross & edge_valid
+            inc_sat = (moved_sat | local_sat).astype(jnp.int32)
+            if simple:
+                sat_cnt = (st["sat_cnt"]
+                           + jnp.zeros(T, jnp.int32).at[e_task].add(inc_sat))
+            else:
+                # one fused scatter for both per-task counters (each
+                # scatter call costs ~40us fixed on XLA:CPU)
+                inc_in = (t_newly[prod_task_e] & edge_valid).astype(jnp.int32)
+                both = (jnp.zeros(2 * T, jnp.int32)
+                        .at[jnp.concatenate([e_task, e_task + T])]
+                        .add(jnp.concatenate([inc_sat, inc_in])))
+                sat_cnt = st["sat_cnt"] + both[:T]
+            newly_en = ((sat_cnt >= n_inputs) & (st["sat_cnt"] < n_inputs)
+                        & task_valid)
+            fr_task, ov = _frontier_append(st["fr_task"], newly_en, t_ids)
+            st = dict(st, sat_cnt=sat_cnt, fr_task=fr_task)
+            if not simple:
+                new_flow = needed & t_newly[prod_task_e]
+                fr_flow, ov_f = _frontier_append(st["fr_flow"], new_flow,
+                                                 e_ids)
+                st = dict(st, in_cnt=st["in_cnt"] + both[T:], fr_flow=fr_flow)
+                ov = ov | ov_f
+            return dict(st, overflow=st["overflow"] | ov)
 
-        st = jax.lax.while_loop(cond, body, state0)
+        def cond(st):
+            live = (~jnp.all(st["t_done"])) & (st["steps"] < steps_cap)
+            if use_frontier:
+                # an overflowed frontier is no longer sound — stop and
+                # report (ok is already poisoned by the flag)
+                live = live & ~st["overflow"]
+            return live
+
+        if use_frontier:
+            # loop-invariant worker one-hot for the dense core-release
+            # reduce in body_frontier
+            onehot_aw = (assignment[:, None]
+                         == jnp.arange(W, dtype=jnp.int32)[None, :])
+        st = jax.lax.while_loop(cond, body_frontier if use_frontier else body,
+                                state0)
         makespan = jnp.max(jnp.where(st["t_done"] & task_valid,
                                      st["t_finish"], 0.0))
-        transferred = jnp.sum(jnp.where(needed & st["f_done"], f_bytes, 0.0))
+        if use_frontier and use_slots:
+            transferred = st["transferred"]
+        else:
+            transferred = jnp.sum(jnp.where(needed & st["f_done"], f_bytes,
+                                            0.0))
         ok = jnp.all(st["t_done"])
-        if use_slots:
-            ok = ok & ~st["overflow"]
+        overflow = st.get("overflow", jnp.bool_(False))
+        ok = ok & ~overflow
         makespan = jnp.where(ok, makespan, jnp.nan)
-        if return_steps:
-            return makespan, transferred, ok, st["steps"]
-        return makespan, transferred, ok
+        return SimResult(makespan, transferred, ok, overflow,
+                         st["n_events"], st["steps"])
 
     return run
 
@@ -456,11 +764,14 @@ def make_bucket_simulator(n_workers: int, cores, netmodel: str = "maxmin",
 def make_simulator(spec: GraphSpec, n_workers: int, cores,
                    netmodel: str = "maxmin", flow_rounds: int = 4,
                    max_steps: int | None = None, **kwargs):
-    """Legacy per-graph binding of ``make_bucket_simulator``: returns
-    ``run(assignment, priority, durations, sizes, bandwidth) ->
-    (makespan, transferred_bytes, ok)`` with ``spec`` baked in.
-    Keyword-only options (``flow_slots``, ``waterfill_impl``,
-    ``return_steps``) pass through."""
+    """Deprecated per-graph binding of ``make_bucket_simulator`` —
+    use ``repro.core.vectorized.api.build(spec, ...)`` (DESIGN.md §8).
+    Returns ``run(assignment, priority, durations, sizes, bandwidth)
+    -> SimResult`` with ``spec`` baked in."""
+    warnings.warn(
+        "make_simulator is deprecated; use "
+        "repro.core.vectorized.api.build(spec, n_workers=..., cores=...) "
+        "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
     bspec = as_bucketed(spec)
     brun = make_bucket_simulator(n_workers, cores, netmodel, flow_rounds,
                                  max_steps, **kwargs)
@@ -472,26 +783,45 @@ def make_simulator(spec: GraphSpec, n_workers: int, cores,
     return run
 
 
+def _bucket_max(onehot, values):
+    """Per-bucket max via a dense ``[F, n_buckets]`` masked reduce.
+    Semantically identical to ``full(n_buckets, NEG).at[bucket].max(v)``
+    (f32 max is order-independent) but scatter-free: XLA:CPU lowers
+    every scatter to a ~40us library call inside a ``while_loop``,
+    which dominates the event loop for the small bucket counts here.
+    ``initial`` keeps the reduce defined for zero-length frontiers."""
+    return jnp.max(jnp.where(onehot, values[:, None], NEG), axis=0,
+                   initial=NEG)
+
+
 def _pick_per_bucket(bucket, n_buckets, eligible, *keys):
     """Lexicographic argmax per bucket.  ``keys`` are f32 arrays (higher
     wins); final tie broken by smallest element index.  Returns bool[F]
     with at most one True per bucket."""
+    onehot = bucket[:, None] == jnp.arange(n_buckets,
+                                           dtype=bucket.dtype)[None, :]
     cand = eligible
     for k in keys:
         kk = jnp.where(cand, k, NEG)
-        mb = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(kk)[bucket]
+        mb = _bucket_max(onehot, kk)[bucket]
         cand = cand & (kk == mb) & (mb > NEG)
     idx = jnp.arange(bucket.shape[0], dtype=jnp.float32)
     ii = jnp.where(cand, -idx, NEG)
-    mb = jnp.full(n_buckets, NEG, jnp.float32).at[bucket].max(ii)[bucket]
+    mb = _bucket_max(onehot, ii)[bucket]
     return cand & (ii == mb)
 
 
-def _check_ok(ok, context: str):
+def _check_ok(ok, context: str, overflow=None):
     """Raise instead of letting NaN makespans leak into result tables."""
     ok = np.asarray(ok)
     if not ok.all():
         bad = int(ok.size - ok.sum())
+        if overflow is not None and np.asarray(overflow).any():
+            nov = int(np.asarray(overflow).sum())
+            raise RuntimeError(
+                f"{context}: {nov}/{ok.size} simulation(s) overflowed a "
+                f"bounded ready frontier (DESIGN.md §3) — widen "
+                f"`frontier_caps` or run with `frontier=False`")
         raise RuntimeError(
             f"{context}: {bad}/{ok.size} simulation(s) exhausted their "
             f"max_steps event budget before all tasks finished (makespan "
@@ -516,12 +846,14 @@ def simulate_batch(graph, assignments, priorities, n_workers, cores,
     """Convenience: vmap over a batch of (assignment, priority).
     Returns ``(makespans, transferred_bytes)``; raises if any simulation
     in the batch failed to complete within its event budget."""
-    spec = encode_graph(graph)
-    run = make_simulator(spec, n_workers, cores, netmodel)
-    fn = jax.jit(jax.vmap(lambda a, p: run(a, p, bandwidth=bandwidth)))
-    ms, xfer, ok = fn(jnp.asarray(assignments), jnp.asarray(priorities))
-    _check_ok(ok, f"simulate_batch({graph.name!r})")
-    return ms, xfer
+    bspec = as_bucketed(encode_graph(graph))
+    brun = make_bucket_simulator(n_workers, cores, netmodel)
+    fn = jax.jit(jax.vmap(
+        lambda a, p: brun(bspec, a, p, bandwidth=bandwidth)))
+    res = fn(jnp.asarray(assignments), jnp.asarray(priorities))
+    _check_ok(res.ok, f"simulate_batch({graph.name!r})",
+              res.overflow)
+    return res.makespan, res.transferred
 
 
 # ======================================================================
@@ -534,10 +866,10 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
                                   flow_rounds: int = 4,
                                   max_steps: int | None = None, *,
                                   max_cores: int | None = None, flow_slots=None,
-                                  waterfill_impl: str = "auto",
-                                  return_steps: bool = False):
+                                  frontier=None, frontier_caps=None,
+                                  waterfill_impl: str = "auto"):
     """Returns ``run(bspec, est_durations, est_sizes, msd, decision_delay,
-    bandwidth, seed, cores) -> (makespan, transferred_bytes, ok)`` — a
+    bandwidth, seed, cores) -> SimResult`` — a
     pure JAX function mirroring the reference simulator's event loop
     (``Simulator._step``) including its dynamic-scheduling machinery:
 
@@ -578,7 +910,19 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
     late-bound traced ``cores`` vector (build with ``cores=None`` + a
     static ``max_cores``), the bounded flow-slot pool on the max-min
     path (``flow_slots``), the routed max-min solver
-    (``waterfill_impl``), and ``return_steps``.
+    (``waterfill_impl``), and the ready-frontier compaction
+    (``frontier``/``frontier_caps``).  The dynamic frontier derives
+    in-flight flow state from the slot pool, so on the max-min path it
+    requires ``flow_slots`` (the default); one fused O(E) detection
+    pass per event feeds bounded candidate lists, and everything
+    event-rate-dependent (flow pick rounds, Appendix-A start rounds,
+    the greedy invoke's per-key views) runs on O(frontier)/O(S)
+    entries.  Tie-break caveat (greedy only): the dedup representative
+    of an (object, destination) key is pinned when the key first
+    becomes wanted, so an exact cross-key priority tie can order picks
+    by a different edge id than the baseline when a same-key edge with
+    a smaller id becomes wanted later; static schedulers assign every
+    consumer at one apply event, so their tie-breaks are exact.
     """
     if scheduler not in VEC_SCHEDULERS:
         raise KeyError(f"unknown vectorized scheduler {scheduler!r} "
@@ -592,6 +936,8 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
     max_cores = max(int(max_cores), 1)
     simple = netmodel == "simple"
     use_slots_cfg = (flow_slots is not False) and not simple
+    use_frontier = _resolve_frontier(frontier, simple=simple,
+                                     use_slots=use_slots_cfg, dynamic=True)
     wf = None if simple else _make_waterfill(waterfill_impl)
     S = W * DOWNLOAD_SLOTS
     slot_dst = jnp.arange(S, dtype=jnp.int32) // DOWNLOAD_SLOTS
@@ -657,6 +1003,13 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             p_prio0 = prio0
             p_time0 = jnp.where(task_valid, delay, jnp.inf)
 
+        if frontier_caps is None:
+            CF, CT = frontier_caps_for((T, O, E))
+        else:
+            # an explicit override never exceeds the axis itself
+            CF, CT = min(frontier_caps[0], E), min(frontier_caps[1], T)
+        t_ids = jnp.arange(T, dtype=jnp.int32)
+
         state0 = dict(
             now=jnp.float32(0.0),
             last=NEG_TIME,                       # last scheduler invocation
@@ -668,10 +1021,14 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             t_done=~task_valid,
             t_finish=jnp.full(T, jnp.inf, jnp.float32),
             free=cores_j.astype(jnp.int32),
-            f_started=jnp.zeros(E, bool),        # flow = input edge
-            f_done=jnp.zeros(E, bool),
             steps=jnp.int32(0),
+            n_events=jnp.int32(0),
         )
+        if not (use_frontier and use_slots):
+            # frontier + slots: flow identity lives in the slot pool
+            # and per-key bools; no per-edge flow carries at all
+            state0.update(f_started=jnp.zeros(E, bool),  # flow = input edge
+                          f_done=jnp.zeros(E, bool))
         if use_slots:
             state0.update(
                 slot_edge=jnp.full(S, -1, jnp.int32),
@@ -681,6 +1038,22 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             )
         else:
             state0["f_rem"] = e_bytes
+        if use_frontier:
+            # assignments arrive over time, so every frontier starts
+            # empty: the per-event detection pass appends as tasks gain
+            # (producer-done, consumer-assigned) pairs
+            state0.setdefault("overflow", jnp.bool_(False))
+            state0.update(
+                enq_t=jnp.zeros(T, bool),        # ever-enqueued tasks
+                in_cnt=jnp.zeros(T, jnp.int32),  # produced valid inputs
+                fr_task=jnp.full(CT, -1, jnp.int32),
+            )
+            if E > 0:
+                state0.update(key_q=jnp.zeros(F, bool),
+                              key_done=jnp.zeros(F, bool))
+                if use_slots:
+                    state0.update(fr_flow=jnp.full(CF, -1, jnp.int32),
+                                  transferred=jnp.float32(0.0))
 
         # ------------------------------------------------ shared views
         def edge_views(st):
@@ -722,18 +1095,29 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
             if E == 0:
                 cost_tw = jnp.zeros((T, W), jnp.float32)
             else:
-                _, _, key_e = edge_views(st)
                 prod = produced_of(st)
                 prod_w = st["aw"][producer]
-                done_ow = key_reduce_or(key_e, st["f_done"]).reshape(O, W)
-                dl_ow = key_reduce_or(
-                    key_e, st["f_started"] & ~st["f_done"]).reshape(O, W)
+                if use_frontier and use_slots:
+                    # per-key views come straight from the carried key
+                    # bools and the S-slot pool — no O(E) reduce here
+                    done_ow = st["key_done"].reshape(O, W)
+                    sk = e_obj[jnp.clip(st["slot_edge"], 0)] * W + slot_dst
+                    dl_ow = (jnp.zeros(F, bool)
+                             .at[sk].max(st["slot_edge"] >= 0)
+                             .reshape(O, W))
+                else:
+                    _, _, key_e = edge_views(st)
+                    done_ow = key_reduce_or(key_e, st["f_done"]).reshape(O, W)
+                    dl_ow = key_reduce_or(
+                        key_e, st["f_started"] & ~st["f_done"]).reshape(O, W)
                 local_ow = (prod_w[:, None] == jnp.arange(W)[None, :]) \
                     & prod[:, None]
                 missing = ~(local_ow | done_ow | dl_ow)
                 size_now = jnp.where(prod, sizes_true, est_size)
                 cost_tw = bucket_transfer_costs(bspec, size_now, missing)
-            ready_un = (inputs_produced(st) & (st["aw"] < 0)
+            ready_t = (st["in_cnt"] >= n_inputs) if use_frontier \
+                else inputs_produced(st)
+            ready_un = (ready_t & (st["aw"] < 0)
                         & (st["pw"] < 0) & ~st["t_done"])
             queued = (((st["aw"] >= 0) | (st["pw"] >= 0))
                       & ~st["t_started"] & ~st["t_done"])
@@ -840,6 +1224,91 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
                 )
             return st
 
+        def start_flows_frontier(st, keymax):
+            """Max-min flow picks over the pinned candidate list; the
+            slot pool is required (in-flight state and the Appendix-A
+            occupancy live there).  ``keymax`` is this event's priority
+            scatter-max from the detection pass, gathered only at the
+            CF candidates; ``-edge_id`` reproduces the baseline
+            tie-break (exact for static schedulers, see factory
+            docstring for the greedy caveat)."""
+            fr = st["fr_flow"]
+            cid = jnp.clip(fr, 0)
+            alive = fr >= 0
+            c_dst = jnp.clip(st["aw"][e_task[cid]], 0)
+            c_src = jnp.clip(st["aw"][prod_task_e[cid]], 0)
+            c_pair = c_src * W + c_dst
+            c_prio = keymax[e_obj[cid] * W + c_dst]
+            c_bytes = e_bytes[cid]
+            neg_id = -fr.astype(jnp.float32)
+            pair_ids = jnp.arange(W * W, dtype=jnp.int32)
+            occ = st["slot_edge"] >= 0
+            dcnt = occ.reshape(W, DOWNLOAD_SLOTS).sum(axis=1,
+                                                      dtype=jnp.int32)
+            pair_s = st["slot_src"] * W + slot_dst
+            pcnt = jnp.sum((pair_s[:, None] == pair_ids[None, :])
+                           & occ[:, None], axis=0, dtype=jnp.int32)
+            alive0 = alive
+            onehot_w = c_dst[:, None] == jnp.arange(W,
+                                                    dtype=jnp.int32)[None, :]
+            for _ in range(flow_rounds):
+                eligible = (alive & (dcnt[c_dst] < DOWNLOAD_SLOTS)
+                            & (pcnt[c_pair] < PAIR_SLOTS))
+                pick = _pick_per_bucket(c_dst, W, eligible, c_prio, neg_id)
+                st = _acquire_slots(st, pick, c_dst, c_src, c_bytes, W,
+                                    ids=fr)
+                # occupancy moves only by this event's own picks; the
+                # picks compact to one pair per worker, so the count
+                # deltas are W-wide dense reduces, not scatters
+                pw_pair = jnp.max(jnp.where(onehot_w & pick[:, None],
+                                            c_pair[:, None], -1), axis=0,
+                                  initial=-1)
+                picked_w = pw_pair >= 0
+                dcnt = dcnt + picked_w.astype(jnp.int32)
+                pcnt = pcnt + jnp.sum((pw_pair[:, None] == pair_ids[None, :])
+                                      & picked_w[:, None], axis=0,
+                                      dtype=jnp.int32)
+                alive = alive & ~pick
+            return dict(st, fr_flow=jnp.where(alive0 & ~alive, -1, fr))
+
+        def start_tasks_frontier(st):
+            """Appendix-A start rounds over the bounded enabled list —
+            invariantly exactly the enabled & assigned & not-started
+            tasks, so blocking matches the full [T] scan."""
+            fr = st["fr_task"]
+            tid = jnp.clip(fr, 0)
+            alive = fr >= 0
+            c_w = jnp.clip(st["aw"][tid], 0)
+            c_cpus = cpus[tid]
+            c_prio = st["ap"][tid]
+            c_fin = durations_true[tid]
+            neg_id = -fr.astype(jnp.float32)
+            alive0 = alive
+            free = st["free"]
+            onehot_w = c_w[:, None] == jnp.arange(W,
+                                                  dtype=jnp.int32)[None, :]
+            for _ in range(max_cores):
+                free_at = free[c_w]
+                blocked = alive & (c_cpus > free_at)
+                maxblk = _bucket_max(onehot_w,
+                                     jnp.where(blocked, c_prio, NEG))
+                cand = alive & (c_cpus <= free_at) & (c_prio >= maxblk[c_w])
+                pick = _pick_per_bucket(c_w, W, cand, c_prio, neg_id)
+                # <= 1 pick per worker, so the core delta is a dense
+                # [C, W] masked max, and the started/finish writes can
+                # wait: every round shares st["now"]
+                free = free - jnp.max(jnp.where(onehot_w & pick[:, None],
+                                                c_cpus[:, None], 0), axis=0,
+                                      initial=0)
+                alive = alive & ~pick
+            newly = alive0 & ~alive
+            dest = jnp.where(newly, fr, T)
+            started = st["t_started"].at[dest].set(True, mode="drop")
+            t_finish = st["t_finish"].at[dest].set(st["now"] + c_fin,
+                                                   mode="drop")
+            return dict(st, t_started=started, t_finish=t_finish, free=free,
+                        fr_task=jnp.where(newly, -1, fr))
+
         def rates_of(st):
             if E == 0 or simple:
                 active = st["f_started"] & ~st["f_done"]
@@ -897,7 +1366,10 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
                 jnp.clip(st["aw"], 0)].add(jnp.where(t_newly, cpus, 0))
             st = dict(st, now=now, t_done=st["t_done"] | t_newly, free=free,
                       events=st["events"] | jnp.any(t_newly),
-                      steps=st["steps"] + 1)
+                      steps=st["steps"] + 1,
+                      n_events=st["n_events"]
+                      + jnp.sum(t_newly.astype(jnp.int32))
+                      + jnp.sum(done_now.astype(jnp.int32)))
             if use_slots:
                 newly_done = (jnp.zeros(E, bool)
                               .at[jnp.clip(st["slot_edge"], 0)].max(done_now))
@@ -907,20 +1379,145 @@ def make_bucket_dynamic_simulator(n_workers: int, cores,
                             f_done=st["f_done"] | newly_done)
             return dict(st, f_rem=rem, f_done=st["f_done"] | done_now)
 
-        def cond(st):
-            return (~jnp.all(st["t_done"])) & (st["steps"] < steps_cap)
+        def body_frontier(st):
+            st = apply_due(st)
+            if dynamic_sched:
+                st = invoke(st)
+                st = apply_due(st)           # decision_delay == 0
+            # fused O(E) detection pass — the only per-edge work in the
+            # loop: new (producer-done, consumer-assigned) pairs become
+            # flow candidates (dedup rep pinned per key) and satisfied
+            # edges; everything below runs on the bounded frontiers
+            ready_t = st["in_cnt"] >= n_inputs
+            keymax = None
+            if E > 0:
+                aw_e = st["aw"][e_task]
+                src_e = st["aw"][prod_task_e]
+                key_e = e_obj * W + jnp.clip(aw_e, 0)
+                assigned = (aw_e >= 0) & edge_valid
+                prod_e = st["t_done"][prod_task_e]
+                cross = assigned & (src_e >= 0) & (src_e != aw_e)
+                raw = st["ap"][e_task] + READY_BOOST * \
+                    ready_t[e_task].astype(jnp.float32)
+                raw = jnp.where(assigned, raw, NEG)
+                keymax = jnp.full(F, NEG, jnp.float32).at[key_e].max(raw)
+                want = cross & prod_e & ~st["key_q"][key_e]
+                rep = (jnp.full(F, E, jnp.int32)
+                       .at[key_e].min(jnp.where(want, e_ids, E)))
+                new_flow = want & (rep[key_e] == e_ids)
+                # rep < E exactly marks the keys that just queued a rep,
+                # so key_q updates as a dense [F] mask — no scatter
+                st = dict(st, key_q=st["key_q"] | (rep < E))
+                sat = assigned & ((prod_e & (src_e == aw_e))
+                                  | st["key_done"][key_e])
+                sat_cnt = (jnp.zeros(T, jnp.int32)
+                           .at[e_task].add(sat.astype(jnp.int32)))
+                enabled = ((sat_cnt >= n_inputs) & (st["aw"] >= 0)
+                           & ~st["t_started"])
+                if use_slots:
+                    fr_flow, ov = _frontier_append(st["fr_flow"], new_flow,
+                                                   e_ids)
+                    st = dict(st, fr_flow=fr_flow,
+                              overflow=st["overflow"] | ov)
+                else:
+                    # simple netmodel: no slot limits — pinned reps
+                    # start the moment they become wanted, exactly the
+                    # baseline's immediate-start semantics
+                    st = dict(st, f_started=st["f_started"] | new_flow)
+            else:
+                enabled = (st["aw"] >= 0) & ~st["t_started"]
+            new_en = enabled & ~st["enq_t"]
+            fr_task, ov_t = _frontier_append(st["fr_task"], new_en, t_ids)
+            st = dict(st, fr_task=fr_task, enq_t=st["enq_t"] | new_en,
+                      overflow=st["overflow"] | ov_t)
+            if E > 0 and use_slots:
+                st = start_flows_frontier(st, keymax)
+            st = start_tasks_frontier(st)
+            rates = rates_of(st)
+            running = st["t_started"] & ~st["t_done"]
+            t_next = jnp.min(jnp.where(running, st["t_finish"], jnp.inf))
+            gran = st["now"] * 6e-7 + TIME_EPS
+            if use_slots:
+                active = st["slot_edge"] >= 0
+                rem = st["slot_rem"]
+            else:
+                active = st["f_started"] & ~st["f_done"]
+                rem = st["f_rem"]
+            # double-where: see `body` — rate-0 lanes must not divide
+            safe_rates = jnp.where(rates > 0, rates, 1.0)
+            f_eta = jnp.where(active & (rates > 0), rem / safe_rates,
+                              jnp.inf)
+            f_eta = jnp.where(f_eta <= gran, 0.0, f_eta)
+            f_next = st["now"] + jnp.min(f_eta, initial=jnp.inf)
+            nxt = jnp.minimum(t_next, f_next)
+            nxt = jnp.minimum(nxt, jnp.min(st["pt"]))  # simlint: disable=PY205
+            if dynamic_sched:
+                sched_next = jnp.where(
+                    st["events"], jnp.maximum(st["now"], st["last"] + msd_),
+                    jnp.inf)
+                nxt = jnp.minimum(nxt, sched_next)
+            nxt = jnp.maximum(nxt, st["now"])          # never go back
+            dt = jnp.where(jnp.isfinite(nxt), nxt - st["now"], 0.0)
+            now = jnp.where(jnp.isfinite(nxt), nxt, st["now"])
+            rem = jnp.where(active, rem - rates * dt, rem)
+            done_now = active & ((rem <= BYTES_EPS) | (rem <= rates * gran))
+            t_newly = running & (st["t_finish"] <= now + TIME_EPS)
+            # finished tasks all have aw >= 0, so the dense [T, W] reduce
+            # (aw is state here, unlike the static path's fixed axis)
+            # replaces the free scatter exactly
+            onehot_aw = st["aw"][:, None] == jnp.arange(
+                W, dtype=jnp.int32)[None, :]
+            free = st["free"] + jnp.sum(
+                jnp.where(onehot_aw & t_newly[:, None], cpus[:, None], 0),
+                axis=0, dtype=jnp.int32)
+            in_cnt = st["in_cnt"] + jnp.zeros(T, jnp.int32).at[e_task].add(
+                (t_newly[prod_task_e] & edge_valid).astype(jnp.int32))
+            st = dict(st, now=now, t_done=st["t_done"] | t_newly, free=free,
+                      events=st["events"] | jnp.any(t_newly),
+                      in_cnt=in_cnt, steps=st["steps"] + 1,
+                      n_events=st["n_events"]
+                      + jnp.sum(t_newly.astype(jnp.int32))
+                      + jnp.sum(done_now.astype(jnp.int32)))
+            if use_slots:
+                se = st["slot_edge"]
+                sec = jnp.clip(se, 0)
+                # a finished slot completes its whole (obj, dst) key:
+                # every same-key edge is satisfied through key_done
+                sk = e_obj[sec] * W + slot_dst
+                return dict(st, slot_rem=rem,
+                            slot_edge=jnp.where(done_now, -1, se),
+                            key_done=st["key_done"].at[sk].max(done_now),
+                            transferred=st["transferred"]
+                            + jnp.sum(jnp.where(done_now, e_bytes[sec],
+                                                0.0)))
+            st = dict(st, f_rem=rem, f_done=st["f_done"] | done_now)
+            if E > 0:
+                st = dict(st,
+                          key_done=st["key_done"].at[key_e].max(done_now))
+            return st
 
-        st = jax.lax.while_loop(cond, body, state0)
+        def cond(st):
+            live = (~jnp.all(st["t_done"])) & (st["steps"] < steps_cap)
+            if use_frontier:
+                # an overflowed frontier is no longer sound — stop and
+                # report (ok is already poisoned by the flag)
+                live = live & ~st["overflow"]
+            return live
+
+        st = jax.lax.while_loop(cond, body_frontier if use_frontier else body,
+                                state0)
         makespan = jnp.max(jnp.where(st["t_done"] & task_valid,
                                      st["t_finish"], 0.0))
-        transferred = jnp.sum(jnp.where(st["f_done"], e_bytes, 0.0))
+        if use_frontier and use_slots:
+            transferred = st["transferred"]
+        else:
+            transferred = jnp.sum(jnp.where(st["f_done"], e_bytes, 0.0))
         ok = jnp.all(st["t_done"])
-        if use_slots:
-            ok = ok & ~st["overflow"]
+        overflow = st.get("overflow", jnp.bool_(False))
+        ok = ok & ~overflow
         makespan = jnp.where(ok, makespan, jnp.nan)
-        if return_steps:
-            return makespan, transferred, ok, st["steps"]
-        return makespan, transferred, ok
+        return SimResult(makespan, transferred, ok, overflow,
+                         st["n_events"], st["steps"])
 
     return run
 
@@ -929,12 +1526,16 @@ def make_dynamic_simulator(spec: GraphSpec, n_workers: int, cores,
                            scheduler: str = "blevel",
                            netmodel: str = "maxmin", flow_rounds: int = 4,
                            max_steps: int | None = None, **kwargs):
-    """Legacy per-graph binding of ``make_bucket_dynamic_simulator``:
-    returns ``run(est_durations, est_sizes, msd, decision_delay,
-    bandwidth, seed) -> (makespan, transferred_bytes, ok)`` with ``spec``
-    baked in.  All six arguments are batchable under ``jax.vmap``, so a
-    whole (msd x decision_delay x imode x bandwidth x seed) grid is one
-    device call."""
+    """Deprecated per-graph binding of ``make_bucket_dynamic_simulator``
+    — use ``repro.core.vectorized.api.build(spec, scheduler=...,
+    dynamic=True)`` (DESIGN.md §8).  Returns ``run(est_durations,
+    est_sizes, msd, decision_delay, bandwidth, seed) -> SimResult`` with
+    ``spec`` baked in; all six arguments are batchable under
+    ``jax.vmap``."""
+    warnings.warn(
+        "make_dynamic_simulator is deprecated; use "
+        "repro.core.vectorized.api.build(spec, scheduler=..., "
+        "dynamic=True) (DESIGN.md §8)", DeprecationWarning, stacklevel=2)
     cores_v = _resolve_cores(n_workers, cores)
     _check_cpus_fit([spec], cores_v, "make_dynamic_simulator")
     bspec = as_bucketed(spec)
@@ -985,8 +1586,10 @@ class DynamicGridRunner:
         self.scheduler = scheduler
         if spec is None:
             spec = encode_graph(graph)
-        self.run = make_dynamic_simulator(spec, n_workers, cores, scheduler,
-                                          netmodel, max_steps=max_steps)
+        from .api import build
+        self.run = build(spec, n_workers=n_workers, cores=cores,
+                         scheduler=scheduler, netmodel=netmodel,
+                         dynamic=True, max_steps=max_steps)
         self._fn = jax.jit(jax.vmap(self.run))
         self._est = {}
 
@@ -1008,10 +1611,10 @@ class DynamicGridRunner:
                       for p in points])
         S = np.stack([self._estimates(p.get("imode", "exact"))[1]
                       for p in points])
-        ms, xfer, ok = self._fn(D, S, M, DD, BW, SD)
-        _check_ok(ok, f"simulate_dynamic_grid({self.graph.name!r}, "
-                      f"{self.scheduler!r})")
-        return np.asarray(ms), np.asarray(xfer)
+        res = self._fn(D, S, M, DD, BW, SD)
+        _check_ok(res.ok, f"simulate_dynamic_grid({self.graph.name!r}, "
+                          f"{self.scheduler!r})", res.overflow)
+        return np.asarray(res.makespan), np.asarray(res.transferred)
 
 
 class BucketedGridRunner:
@@ -1076,9 +1679,11 @@ class BucketedGridRunner:
         else:
             self.bspec = stack_specs([pad_spec(s, self.shape)
                                       for s in self.specs])
-        self.run = make_bucket_dynamic_simulator(
-            n_workers, None, scheduler, netmodel, max_steps=max_steps,
-            max_cores=max(int(clusters.max()), 1))
+        from .api import build
+        self.run = build(None, n_workers=n_workers, cores=None,
+                         scheduler=scheduler, netmodel=netmodel,
+                         dynamic=True, max_steps=max_steps,
+                         max_cores=max(int(clusters.max()), 1))
         over_points = jax.vmap(self.run,
                                in_axes=(None, 0, 0, 0, 0, 0, 0, None))
         over_graphs = jax.vmap(over_points,
@@ -1118,11 +1723,11 @@ class BucketedGridRunner:
                       for p in points], axis=1)
         S = np.stack([self._estimates(p.get("imode", "exact"))[1]
                       for p in points], axis=1)
-        ms, xfer, ok = self._fn(self.bspec, D, S, M, DD, BW, SD,
-                                self.clusters)
-        _check_ok(ok, f"BucketedGridRunner({self.names!r}, "
-                      f"{self.scheduler!r})")
-        ms, xfer = np.asarray(ms), np.asarray(xfer)
+        res = self._fn(self.bspec, D, S, M, DD, BW, SD,
+                       self.clusters)
+        _check_ok(res.ok, f"BucketedGridRunner({self.names!r}, "
+                          f"{self.scheduler!r})", res.overflow)
+        ms, xfer = np.asarray(res.makespan), np.asarray(res.transferred)
         if self._single_cluster:
             return ms[0], xfer[0]
         return ms, xfer

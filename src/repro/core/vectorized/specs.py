@@ -226,6 +226,51 @@ def round_up(n: int, multiple: int = PAD_MULTIPLE) -> int:
     return 0 if n == 0 else ((n + multiple - 1) // multiple) * multiple
 
 
+# floor of the derived frontier capacities: buckets at or below it get
+# full coverage (capacity == axis length), so the frontier can never
+# overflow and parity with the per-edge baseline is structural.  256
+# keeps fork-heavy mid-size graphs (a few hundred simultaneously
+# enabled tasks under a packed schedule) inside the list while the
+# large survey buckets still run at n // 4
+FRONTIER_FLOOR = 256
+
+
+def frontier_cap(n: int, floor: int = FRONTIER_FLOOR) -> int:
+    """Derived ready-frontier capacity for an axis of length ``n``
+    (DESIGN.md §3).  Small buckets get full coverage (``cap == n`` — the
+    frontier cannot overflow, so frontier mode is exactly the baseline
+    with compact picks); large buckets get ``n // 4`` rounded up to
+    ``PAD_MULTIPLE``, bounding the per-event pick work the same way the
+    ``DOWNLOAD_SLOTS * W`` pool bounds in-flight flows.  A frontier
+    overflow at runtime is recorded and poisons ``ok`` (honest failure,
+    never silent truncation); callers can widen via the factories'
+    ``frontier_caps`` override."""
+    if n <= floor:
+        return n
+    return min(n, max(floor, round_up(n // 4)))
+
+
+def frontier_caps_for(shape, floor: int = FRONTIER_FLOOR):
+    """``(flow_cap, task_cap)`` for a bucket shape ``(T, O, E)`` — the
+    derived sizes of the candidate-flow and ready-task frontiers."""
+    T, _O, E = shape
+    return frontier_cap(E, floor), frontier_cap(T, floor)
+
+
+def frontier_caps_for_spec(bspec, floor: int = FRONTIER_FLOOR):
+    """Root-aware ``(flow_cap, task_cap)`` for a *concrete* spec: the
+    shape-derived ``frontier_caps_for``, with the task cap raised to
+    cover the graph's roots.  Every root is simultaneously ready at
+    t=0, so a shape-only cap below the root count would overflow on the
+    first step (e.g. a graph of all-independent tasks); ``build`` uses
+    this whenever the spec is bound at build time."""
+    T, _O, E = bspec.shape
+    CF, CT = frontier_caps_for((T, _O, E), floor)
+    roots = np.asarray(bspec.task_valid) & (np.asarray(bspec.n_inputs) == 0)
+    n_roots = int(np.max(np.sum(roots, axis=-1))) if roots.size else 0
+    return CF, min(T, max(CT, round_up(n_roots)))
+
+
 def t_bucket(T: int, t_edges=T_EDGES, overflow: str = "derive") -> int:
     """Bucket edge for a task count: the smallest configured edge >= T.
     Beyond the last edge the ``overflow`` policy decides (ISSUE 5

@@ -78,7 +78,7 @@ def run_vectorized(g, netmodel):
     a = np.array([assignment[t] for t in g.tasks], np.int32)
     p = np.array([priorities[t] for t in g.tasks], np.float32)
     run = jax.jit(make_simulator(spec, 3, 4, netmodel))
-    ms, xfer, ok = run(a, p, bandwidth=np.float32(BW))
+    ms, xfer, ok = run(a, p, bandwidth=np.float32(BW))[:3]
     assert bool(ok)
     return float(ms), float(xfer)
 

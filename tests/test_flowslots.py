@@ -4,10 +4,12 @@ traced-cores cluster axis.
 Contracts:
 
 * under the max-min model the bounded slot pool (``S = 4W``) is a pure
-  reformulation — makespans and transferred bytes match the PR-3
-  per-edge path *bit for bit* (same flow sets => bitwise-identical
-  waterfill rates, ETAs and integration steps), across schedulers,
-  netmodels and heterogeneous clusters;
+  reformulation — makespans match the PR-3 per-edge path *bit for bit*
+  (same flow sets => bitwise-identical waterfill rates, ETAs and
+  integration steps), across schedulers, netmodels and heterogeneous
+  clusters; transferred bytes agree to 1e-5 relative (the frontier
+  slot path accumulates per event, so the f32 summation order differs
+  from the end-of-run per-edge sum — DESIGN.md §3);
 * the overflow flag never fires (the Appendix-A limits bound in-flight
   flows by the pool size), so ``ok`` stays True on normal runs;
 * the per-worker cores vector is a traced argument: one jit compilation
@@ -27,6 +29,14 @@ from repro.core.vectorized import (encode_graph, make_dynamic_simulator,
 
 import test_vectorized_dynamic as tvd
 
+XFER_RTOL = 1e-5      # f32 summation-order tolerance (DESIGN.md §3)
+
+
+def assert_agree(a, b, ctx=None):
+    """Makespan bitwise, transferred to XFER_RTOL relative."""
+    assert a[0] == b[0], ctx
+    assert abs(a[1] - b[1]) <= XFER_RTOL * max(1.0, abs(a[1])), ctx
+
 
 def run_static_both(g, W, cores, seed, netmodel="maxmin", bw=100 * MiB):
     import random
@@ -41,7 +51,7 @@ def run_static_both(g, W, cores, seed, netmodel="maxmin", bw=100 * MiB):
     for flag in (False, True):
         run = jax.jit(make_simulator(spec, W, cores, netmodel,
                                      flow_slots=flag))
-        ms, xf, ok = run(a, p, bandwidth=np.float32(bw))
+        ms, xf, ok = run(a, p, bandwidth=np.float32(bw))[:3]
         assert bool(ok), f"flow_slots={flag}"
         out[flag] = (float(ms), float(xf))
     return out
@@ -51,14 +61,14 @@ def run_static_both(g, W, cores, seed, netmodel="maxmin", bw=100 * MiB):
 def test_static_slot_path_bitwise_vs_per_edge(gname):
     g = make_graph(gname, seed=0)
     out = run_static_both(g, 8, 4, seed=11)
-    assert out[True] == out[False]
+    assert_agree(out[True], out[False])
 
 
 @pytest.mark.parametrize("seed", range(3))
 def test_static_slot_path_random_graphs_hetero(seed):
     g = random_graph(seed, n_tasks=24)
     out = run_static_both(g, 4, [4, 2, 2, 1], seed=seed + 31)
-    assert out[True] == out[False]
+    assert_agree(out[True], out[False])
 
 
 @pytest.mark.parametrize("gname", list(tvd.GRAPHS))
@@ -81,10 +91,10 @@ def test_dynamic_slot_path_bitwise_vs_per_edge(gname, sched):
         for flag, run in runs.items():
             ms, xf, ok = run(d, s, np.float32(pt["msd"]),
                              np.float32(pt["decision_delay"]),
-                             np.float32(100 * MiB))
+                             np.float32(100 * MiB))[:3]
             assert bool(ok), (pt, flag)
             res[flag] = (float(ms), float(xf))
-        assert res[True] == res[False], pt
+        assert_agree(res[True], res[False], pt)
 
 
 def test_dynamic_slot_path_hetero_cluster():
@@ -96,10 +106,10 @@ def test_dynamic_slot_path_hetero_cluster():
         run = jax.jit(make_dynamic_simulator(spec, 5, [8, 2, 2, 2, 2],
                                              "blevel", "maxmin",
                                              flow_slots=flag))
-        ms, xf, ok = run(d, s)
+        ms, xf, ok = run(d, s)[:3]
         assert bool(ok)
         res[flag] = (float(ms), float(xf))
-    assert res[True] == res[False]
+    assert_agree(res[True], res[False])
 
 
 def test_simple_netmodel_ignores_flow_slots_flag():
@@ -107,7 +117,7 @@ def test_simple_netmodel_ignores_flow_slots_flag():
     per-edge path and agree trivially — the flag must not break it."""
     g = tvd.mini_merge()
     out = run_static_both(g, 4, 2, seed=5, netmodel="simple")
-    assert out[True] == out[False]
+    assert_agree(out[True], out[False])
 
 
 def test_overflow_flag_stays_clear_under_contention():
@@ -116,7 +126,7 @@ def test_overflow_flag_stays_clear_under_contention():
     asserted inside run_static_both)."""
     g = tvd.mini_merge(8)
     out = run_static_both(g, 2, 2, seed=3, bw=8 * MiB)
-    assert out[True] == out[False]
+    assert_agree(out[True], out[False])
 
 
 def test_one_compile_serves_two_same_w_clusters():

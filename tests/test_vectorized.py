@@ -25,7 +25,7 @@ def both(g, W, cores, netmodel, seed, bw=100 * MiB):
     run = jax.jit(make_simulator(encode_graph(g), W, cores, netmodel))
     a = np.array([assign[t] for t in g.tasks], np.int32)
     p = np.array([prios[t] for t in g.tasks], np.float32)
-    ms, xfer, ok = run(a, p, bandwidth=bw)
+    ms, xfer, ok = run(a, p, bandwidth=bw)[:3]
     assert bool(ok)
     return rep, float(ms), float(xfer)
 
@@ -54,12 +54,12 @@ def test_vmap_batches_schedules():
     rng = np.random.default_rng(0)
     A = rng.integers(0, 4, (8, spec.T)).astype(np.int32)
     P = np.tile(np.arange(spec.T, 0, -1, dtype=np.float32), (8, 1))
-    ms, xfer, ok = jax.jit(jax.vmap(lambda a, p: run(a, p)))(A, P)
+    ms, xfer, ok = jax.jit(jax.vmap(lambda a, p: run(a, p)))(A, P)[:3]
     assert ms.shape == (8,)
     assert np.all(np.asarray(ok))
     assert np.all(np.isfinite(np.asarray(ms)))
     # batched results match one-at-a-time
-    m0, _, _ = jax.jit(run)(A[3], P[3])
+    m0, _, _ = jax.jit(run)(A[3], P[3])[:3]
     assert float(ms[3]) == pytest.approx(float(m0), rel=1e-6)
 
 
@@ -74,7 +74,7 @@ def test_exhausted_budget_reports_not_nan():
     run = make_simulator(spec, 4, 4, "maxmin", max_steps=1)
     a = np.zeros(spec.T, np.int32)
     p = np.arange(spec.T, 0, -1).astype(np.float32)
-    ms, _, ok = jax.jit(run)(a, p)
+    ms, _, ok = jax.jit(run)(a, p)[:3]
     assert not bool(ok)
     assert np.isnan(float(ms))
     # a 4-cpu task on 1-core workers deadlocks the real budget too

@@ -214,7 +214,7 @@ def test_static_and_dynamic_loops_agree():
         aw, prio = jax.jit(make_static_blevel_scheduler(spec, W, cores))(
             d, s, np.float32(bw))
         ms_s, xf_s, ok_s = jax.jit(make_simulator(spec, W, cores))(
-            aw, prio, bandwidth=np.float32(bw))
+            aw, prio, bandwidth=np.float32(bw))[:3]
         ms_d, xf_d = simulate_dynamic_grid(
             g, "blevel", W, cores, [dict(imode=imode, bandwidth=bw)])
         assert bool(ok_s)
@@ -239,7 +239,7 @@ def test_every_static_scheduler_usable_from_both_simulators():
         aw, prio = jax.jit(make_vec_scheduler(spec, W, cores, name))(
             d, s, np.float32(bw), np.int32(2))
         ms_s, xf_s, ok_s = jax.jit(make_simulator(spec, W, cores))(
-            aw, prio, bandwidth=np.float32(bw))
+            aw, prio, bandwidth=np.float32(bw))[:3]
         ms_d, xf_d = simulate_dynamic_grid(
             g, name, W, cores, [dict(imode="user", bandwidth=bw, seed=2)])
         assert bool(ok_s), name
@@ -279,7 +279,7 @@ def test_decision_delay_shifts_single_task():
     g.new_task(1.0)
     run = make_dynamic_simulator(encode_graph(g), 1, 1, "blevel")
     d, s = encode_imode(g, "exact")
-    ms, _, ok = jax.jit(run)(d, s, np.float32(0.1), np.float32(0.05))
+    ms, _, ok = jax.jit(run)(d, s, np.float32(0.1), np.float32(0.05))[:3]
     assert bool(ok)
     assert float(ms) == pytest.approx(1.05, rel=1e-5)
 
@@ -290,7 +290,7 @@ def test_dynamic_budget_exhaustion_flags_not_nan():
     run = make_dynamic_simulator(encode_graph(g), 2, 2, "greedy",
                                  max_steps=2)
     d, s = encode_imode(g, "exact")
-    ms, _, ok = jax.jit(run)(d, s)
+    ms, _, ok = jax.jit(run)(d, s)[:3]
     assert not bool(ok)
     assert np.isnan(float(ms))
     with pytest.raises(RuntimeError, match="event budget"):

@@ -230,7 +230,7 @@ def test_recipe_graphs_ref_vs_vectorized(gname):
     run = jax.jit(make_simulator(encode_graph(g), W, cores, "maxmin"))
     a = np.array([assign[t] for t in g.tasks], np.int32)
     p = np.array([prios[t] for t in g.tasks], np.float32)
-    ms, xfer, ok = run(a, p, bandwidth=bw)
+    ms, xfer, ok = run(a, p, bandwidth=bw)[:3]
     assert bool(ok)
     assert float(ms) == pytest.approx(rep.makespan, rel=2e-3)
     assert float(xfer) == pytest.approx(rep.transferred_bytes, rel=1e-3)
