@@ -12,8 +12,10 @@ branch (``gh run list``), downloads each run's ``bench-smoke-results``
 artifact into ``<out>/artifacts/run-<number>-<sha7>/`` (``gh run
 download``; runs whose artifact expired or never uploaded are skipped
 with a note), and hands every directory that materialised to
-``trend.collect``/``write_trend``.  Authentication is whatever ``gh``
-already has (``GH_TOKEN`` in CI).
+``trend.collect``/``write_trend`` — including the ``BENCH_PR7.json`` /
+``BENCH_PR8.json`` perf records inside each artifact, which feed the
+``events_speedup`` / ``grid_throughput_x`` trend columns.
+Authentication is whatever ``gh`` already has (``GH_TOKEN`` in CI).
 """
 from __future__ import annotations
 

@@ -15,17 +15,29 @@ bucket-vs-pergraph amortisation) is readable across PRs::
 writes ``results/trend.csv`` (all survey_agreement rows, ``source``
 column prepended) and ``results/trend.md``.  Columns absent from older
 artifacts (pre-bucketing ones have no ``compile_count``) are tolerated.
+
+Artifacts that carry the machine-readable perf records
+(``BENCH_PR7.json``, ``BENCH_PR8.json``) contribute two extra trend
+columns — the frontier events/sec speedup geomean and the sharded
+engine's warm-vs-cold grid throughput — so the throughput trajectory
+reads across PRs in the same table.
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 
 from .common import geomean
 
 TREND_COLUMNS = ("source", "survey_rows", "agree_rows", "speedup_geomean",
-                 "max_ratio_dev", "compiles", "bucket_vs_pergraph")
+                 "max_ratio_dev", "compiles", "bucket_vs_pergraph",
+                 "events_speedup", "grid_throughput_x")
+
+# machine-readable perf records that ride the same results/ artifact;
+# each contributes one throughput column to the trend table
+BENCH_RECORDS = ("BENCH_PR7.json", "BENCH_PR8.json")
 
 
 def _read_csv(path):
@@ -40,6 +52,44 @@ def _fnum(row, key, default=None):
         return float(row[key])
     except (KeyError, TypeError, ValueError):
         return default
+
+
+def _read_json(path):
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def bench_summary(d):
+    """Throughput columns from the ``BENCH_PR*.json`` perf records in
+    one artifact directory (absent before the PR that introduced each
+    record -> blank cells).
+
+    * ``events_speedup`` — geomean of every ``events_per_s_speedup``
+      row in ``BENCH_PR7.json`` (static + dynamic, all buckets): the
+      frontier-vs-baseline per-step win.
+    * ``grid_throughput_x`` — ``workers.grid_throughput_x`` from
+      ``BENCH_PR8.json``: warm persistently-cached sharded worker vs
+      cold vmap worker, grid points/sec.
+    """
+    out = {"events_speedup": "", "grid_throughput_x": ""}
+    pr7 = _read_json(os.path.join(d, "BENCH_PR7.json"))
+    if pr7:
+        speedups = [s for section in ("static", "dynamic")
+                    for row in pr7.get(section, {}).values()
+                    if (s := _fnum(row, "events_per_s_speedup")) is not None]
+        if speedups:
+            out["events_speedup"] = round(geomean(speedups), 2)
+    pr8 = _read_json(os.path.join(d, "BENCH_PR8.json"))
+    if pr8:
+        x = _fnum(pr8.get("workers", {}), "grid_throughput_x")
+        if x is not None:
+            out["grid_throughput_x"] = round(x, 2)
+    return out
 
 
 def collect(source_dirs):
@@ -80,6 +130,7 @@ def collect(source_dirs):
             "compiles": compiles,
             "bucket_vs_pergraph": (round(_fnum(pergraph[0], "speedup", 0.0),
                                          2) if pergraph else ""),
+            **bench_summary(d),
         })
     return rows, summaries
 

@@ -46,12 +46,14 @@ import numpy as np
 import jax
 
 from .report import Finding
+from ..core.vectorized.engine import make_sharded_rows_fn
 from ..core.vectorized.sim import (DOWNLOAD_SLOTS, make_bucket_simulator,
                                    make_bucket_dynamic_simulator)
 from ..core.vectorized.scheduling import (VEC_SCHEDULERS,
                                           make_bucket_scheduler)
 from ..core.vectorized.specs import (_BSPEC_FIELDS, BucketedGraphSpec,
                                      abstract_spec, frontier_caps_for)
+from ..launch.mesh import make_grid_mesh
 
 _BAD_DTYPES = ("float64", "complex128")
 
@@ -417,6 +419,30 @@ def default_targets(n_workers: int = 4, shape=(32, 64, 96)):
         name="make_bucket_dynamic_simulator[blevel,maxmin,frontier=off]",
         fn=run, args=dyn_args, argnames=dyn_names,
         required_live=_dynamic_live("blevel"), slot_pool=S, n_edges=E))
+
+    # the sharded engine program (engine.py, DESIGN.md §9): the same
+    # dynamic simulator vmapped over clusters x rows under shard_map on
+    # a 1-device "grid" mesh, traced with batched (rows-leading) avals.
+    # The carry/dtype contracts (JX101-103) must survive the batching;
+    # slot-pool and frontier classification (JX105/106) stay off
+    # because vmap prepends the rows axis to every while carry, so the
+    # [S]/[cap] shape keys cannot match by construction.  Liveness
+    # (JX104) is vacuous across the shard_map eqn boundary — every
+    # operand feeds the shard_map call — so required_live is empty
+    # rather than pretending coverage the walk cannot falsify.
+    G, K = 2, 2
+    def rows(l):
+        return sds((G,) + tuple(l.shape), l.dtype)
+    eng_run = make_bucket_dynamic_simulator(W, None, "blevel", "maxmin",
+                                            max_cores=4)
+    targets.append(Target(
+        name="sharded_engine[blevel,maxmin,grid@1]",
+        fn=make_sharded_rows_fn(eng_run, make_grid_mesh(1)),
+        args=(jax.tree_util.tree_map(rows, spec), rows(sds((T,), f32)),
+              rows(sds((O,), f32)), rows(scalar_f), rows(scalar_f),
+              rows(scalar_f), rows(scalar_i), sds((K, W), i32)),
+        argnames=dyn_names,
+        required_live=frozenset()))
 
     sched_args = (spec, sds((T,), f32), sds((O,), f32), scalar_f,
                   scalar_i, cores)

@@ -9,7 +9,10 @@ from .sim import (make_simulator, simulate_batch,
                   DynamicGridRunner, BucketedGridRunner, jit_trace_count,
                   reset_trace_count, trace_counter,
                   DOWNLOAD_SLOTS, PAIR_SLOTS, SimResult)
-from .api import SimConfig, build, build_for_graph
+from .api import SimConfig, build, build_for_graph, make_grid_runner
+from .engine import (ShardedGridRunner, DoubleBufferQueue,
+                     enable_compile_cache, cache_counter,
+                     cache_event_counts, ExecutableStore, exec_counter)
 from .scheduling import (VEC_SCHEDULERS, make_vec_scheduler,
                          make_bucket_scheduler,
                          bucket_ready_tasks, frontier_mask,
@@ -32,7 +35,10 @@ __all__ = ["GraphSpec", "BucketedGraphSpec", "BucketGroup", "encode_graph",
            "DynamicGridRunner", "BucketedGridRunner", "jit_trace_count",
            "reset_trace_count", "trace_counter",
            "DOWNLOAD_SLOTS", "PAIR_SLOTS", "SimResult",
-           "SimConfig", "build", "build_for_graph",
+           "SimConfig", "build", "build_for_graph", "make_grid_runner",
+           "ShardedGridRunner", "DoubleBufferQueue",
+           "enable_compile_cache", "cache_counter", "cache_event_counts",
+           "ExecutableStore", "exec_counter",
            "VEC_SCHEDULERS", "make_vec_scheduler", "make_bucket_scheduler",
            "bucket_ready_tasks", "frontier_mask",
            "make_static_blevel_scheduler", "make_static_tlevel_scheduler",

@@ -43,7 +43,15 @@ class SimConfig:
     default-on where supported, DESIGN.md §3); ``msd`` /
     ``decision_delay`` / ``imode`` / ``seed`` become the *default*
     call arguments of a bound dynamic run — each can still be
-    overridden per call or swept under ``vmap``."""
+    overridden per call or swept under ``vmap``.
+
+    The engine block (DESIGN.md §9): ``engine`` picks the grid
+    executor for ``make_grid_runner`` (``"vmap"`` single-device, or
+    ``"sharded"`` across ``devices`` mesh devices with optional
+    ``stream_rows``-row double-buffered chunking); ``cache_dir``
+    enables JAX's persistent compilation cache for *every* entry point
+    that sees the config, so warm worker processes skip XLA
+    compilation entirely."""
 
     flow_slots: bool | None = None
     frontier: bool | None = None
@@ -55,6 +63,10 @@ class SimConfig:
     decision_delay: float = 0.0
     imode: str = "exact"
     seed: int = 0
+    engine: str = "vmap"
+    devices: int | None = None
+    stream_rows: int | None = None
+    cache_dir: str | None = None
 
     def replace(self, **kwargs) -> "SimConfig":
         return dataclasses.replace(self, **kwargs)
@@ -98,6 +110,9 @@ def build(spec=None, *, n_workers: int, cores=None, scheduler=None,
     ``config=SimConfig(frontier=False)``.  ``cores=None`` plus a static
     ``max_cores`` keeps the cluster a traced call-time argument."""
     cfg = _merge_config(config, opts)
+    if cfg.cache_dir is not None:
+        from .engine import enable_compile_cache
+        enable_compile_cache(cfg.cache_dir)
     bspec = None if spec is None else as_bucketed(spec)
     if (bspec is not None and cfg.frontier is not False
             and cfg.frontier_caps is None
@@ -154,10 +169,56 @@ def build(spec=None, *, n_workers: int, cores=None, scheduler=None,
     return run
 
 
+def make_grid_runner(entries, scheduler, n_workers, cores, *,
+                     netmodel: str = "maxmin", max_steps: int | None = None,
+                     shape=None, batch=None, est_cache=None,
+                     config: SimConfig | None = None, **opts):
+    """Engine-dispatching front door over the bucket grid runners
+    (DESIGN.md §9).  Positional arguments match
+    ``BucketedGridRunner``; the engine choice rides the same
+    config/override mechanics as ``build``::
+
+        runner = make_grid_runner(entries, "blevel", 8, cores2d,
+                                  engine="sharded", devices=8,
+                                  cache_dir="~/.cache/repro-xla")
+        ms, xfer = runner(points)          # [K, B, N], sharded
+
+    ``engine="vmap"`` (default) returns a plain ``BucketedGridRunner``;
+    ``engine="sharded"`` returns a ``ShardedGridRunner`` over
+    ``devices`` mesh devices with optional ``stream_rows`` chunking.
+    ``cache_dir`` enables the persistent compilation cache either way,
+    and for the sharded engine additionally an ``ExecutableStore``
+    under ``<cache_dir>/exec`` — a warm worker then skips tracing
+    entirely (DESIGN.md §9)."""
+    cfg = _merge_config(config, opts)
+    if cfg.cache_dir is not None:
+        from .engine import enable_compile_cache
+        enable_compile_cache(cfg.cache_dir)
+    kwargs = dict(netmodel=netmodel, shape=shape, batch=batch,
+                  est_cache=est_cache,
+                  max_steps=cfg.max_steps if max_steps is None else max_steps)
+    if cfg.engine == "vmap":
+        return _sim.BucketedGridRunner(entries, scheduler, n_workers,
+                                       cores, **kwargs)
+    if cfg.engine == "sharded":
+        import os
+        from .engine import ShardedGridRunner
+        exec_dir = (None if cfg.cache_dir is None else
+                    os.path.join(os.path.expanduser(str(cfg.cache_dir)),
+                                 "exec"))
+        return ShardedGridRunner(entries, scheduler, n_workers, cores,
+                                 devices=cfg.devices,
+                                 stream_rows=cfg.stream_rows,
+                                 exec_dir=exec_dir, **kwargs)
+    raise TypeError(f"unknown engine {cfg.engine!r}; SimConfig.engine is "
+                    f"'vmap' or 'sharded'")
+
+
 def build_for_graph(graph, **kwargs):
     """``build`` for a ``TaskGraph``: encodes the graph first."""
     from .specs import encode_graph
     return build(encode_graph(graph), **kwargs)
 
 
-__all__ = ["SimConfig", "build", "build_for_graph", "GraphSpec"]
+__all__ = ["SimConfig", "build", "build_for_graph", "make_grid_runner",
+           "GraphSpec"]

@@ -68,6 +68,42 @@ VEC_SCHEDULERS = {
 NEG = jnp.float32(-3e38)
 
 
+def spmd_safe_sort(row):
+    """Ascending sort of a small NaN-free 1-D float row without
+    emitting a ``sort`` HLO.  XLA's CPU SPMD partitioner mis-partitions
+    ``sort`` ops that sit inside loop bodies under ``shard_map`` manual
+    regions: it inserts cross-partition all-reduces that *sum* live
+    values across devices, silently corrupting every shard (pinned by
+    ``tests/test_engine.py``; DESIGN.md §9).  Rank-and-scatter over
+    pairwise comparisons is bitwise-equivalent for NaN-free input —
+    ties are bitwise-identical values, so their placement order cannot
+    matter — and costs O(n²) on rows of at most ``max_cores``
+    entries."""
+    n = row.shape[0]
+    ids = jnp.arange(n)
+    lt = row[None, :] < row[:, None]
+    tie = (row[None, :] == row[:, None]) & (ids[None, :] < ids[:, None])
+    rank = jnp.sum(lt | tie, axis=1)
+    return jnp.zeros_like(row).at[rank].set(row)
+
+
+def spmd_safe_argsort(key):
+    """Stable ascending argsort (``jnp.argsort(key, stable=True)``) for
+    NaN-free keys, built from the same rank-and-scatter trick as
+    ``spmd_safe_sort`` and for the same reason: scheduler order
+    computations run inside the simulator's event loop, where a
+    ``sort`` HLO under ``shard_map`` triggers the CPU SPMD
+    partitioner's cross-device all-reduce bug.  rank(i) counts strictly
+    smaller keys plus equal keys at smaller indices, which is exactly
+    the stable order; scattering indices by rank inverts it."""
+    n = key.shape[0]
+    ids = jnp.arange(n)
+    lt = key[None, :] < key[:, None]
+    tie = (key[None, :] == key[:, None]) & (ids[None, :] < ids[:, None])
+    rank = jnp.sum(lt | tie, axis=1)
+    return jnp.zeros(n, ids.dtype).at[rank].set(ids)
+
+
 def _resolve_cores(n_workers, cores):
     """Per-worker core vector: broadcast a scalar, pass vectors through.
     Zero-core entries are inert padding (no task fits, no slot opens).
@@ -157,7 +193,7 @@ def rank_priorities(bl):
     depend on float equality.  Padded tasks (b-level 0, largest ids)
     rank last, so real priorities keep their relative order."""
     T = bl.shape[0]
-    order = jnp.argsort(-bl, stable=True)
+    order = spmd_safe_argsort(-bl)
     return (jnp.zeros(T, jnp.float32)
             .at[order].set(jnp.float32(T) - jnp.arange(T, dtype=jnp.float32)))
 
@@ -221,7 +257,7 @@ def _make_bucket_list_scheduler(n_workers, cores, order_fn, max_cores=None):
             w = jnp.argmin(est)                     # ties: smallest id
             finish = est[w] + est_dur[t]
             row = jnp.where(jnp.arange(C) < cpus[t], finish, slots[w])
-            slots = slots.at[w].set(jnp.sort(row))
+            slots = slots.at[w].set(spmd_safe_sort(row))
             return (slots, aw.at[t].set(w.astype(jnp.int32)),
                     fin.at[t].set(finish),
                     prio.at[t].set(jnp.float32(T) - r.astype(jnp.float32)))
@@ -240,7 +276,7 @@ def make_bucket_blevel_scheduler(n_workers, cores, max_cores=None):
     Decreasing b-level is topological for positive durations, so no
     repair pass is needed (mirrors ``DetBlevelScheduler``)."""
     def order_fn(bspec, est_dur):
-        return jnp.argsort(-bucket_blevel(bspec, est_dur), stable=True)
+        return spmd_safe_argsort(-bucket_blevel(bspec, est_dur))
 
     return _make_bucket_list_scheduler(n_workers, cores, order_fn,
                                        max_cores)
@@ -250,7 +286,7 @@ def make_bucket_tlevel_scheduler(n_workers, cores, max_cores=None):
     """tlevel/SCFET: ascending estimated t-level (ties: smaller id);
     topological for positive durations (mirrors ``DetTlevelScheduler``)."""
     def order_fn(bspec, est_dur):
-        return jnp.argsort(bucket_tlevel(bspec, est_dur), stable=True)
+        return spmd_safe_argsort(bucket_tlevel(bspec, est_dur))
 
     return _make_bucket_list_scheduler(n_workers, cores, order_fn,
                                        max_cores)
@@ -263,7 +299,7 @@ def make_bucket_mcp_scheduler(n_workers, cores, max_cores=None):
     def order_fn(bspec, est_dur):
         bl = bucket_blevel(bspec, est_dur)
         # padded tasks have b-level 0, so the unmasked max is the true CP
-        return jnp.argsort(jnp.max(bl) - bl, stable=True)  # simlint: disable=PY205
+        return spmd_safe_argsort(jnp.max(bl) - bl)  # simlint: disable=PY205
 
     return _make_bucket_list_scheduler(n_workers, cores, order_fn,
                                        max_cores)
@@ -331,7 +367,7 @@ def make_bucket_etf_scheduler(n_workers, cores, max_cores=None):
             t, w = idx // W, idx % W
             finish = flat_est[idx] + est_dur[t]
             row = jnp.where(jnp.arange(C) < cpus[t], finish, slots[w])
-            slots = slots.at[w].set(jnp.sort(row))
+            slots = slots.at[w].set(spmd_safe_sort(row))
             return (slots, aw.at[t].set(w.astype(jnp.int32)),
                     fin.at[t].set(finish), done.at[t].set(True),
                     prio.at[t].set(jnp.float32(T) - r.astype(jnp.float32)))

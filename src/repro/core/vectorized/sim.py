@@ -1684,15 +1684,29 @@ class BucketedGridRunner:
                          scheduler=scheduler, netmodel=netmodel,
                          dynamic=True, max_steps=max_steps,
                          max_cores=max(int(clusters.max()), 1))
+        self._fn = self._make_fn()
+        self._est = {} if est_cache is None else est_cache
+
+    def _make_fn(self):
+        """The compiled grid program: vmap clusters K x graphs B x
+        points N around ``self.run`` under one jit.  Subclass hook —
+        ``ShardedGridRunner`` (engine.py) replaces the single-device
+        nest with a shard_map over a 1-D device mesh."""
         over_points = jax.vmap(self.run,
                                in_axes=(None, 0, 0, 0, 0, 0, 0, None))
         over_graphs = jax.vmap(over_points,
                                in_axes=(0, 0, 0, None, None, None, None,
                                         None))
-        self._fn = jax.jit(jax.vmap(over_graphs,
-                                    in_axes=(None, None, None, None, None,
-                                             None, None, 0)))
-        self._est = {} if est_cache is None else est_cache
+        return jax.jit(jax.vmap(over_graphs,
+                                in_axes=(None, None, None, None, None,
+                                         None, None, 0)))
+
+    def _execute(self, D, S, M, DD, BW, SD):
+        """One device call over the whole [K, B, N] grid.  Subclass
+        hook — the sharded engine reshapes to flat rows, pads to the
+        device count and streams chunks through a prefetch queue, but
+        must return the same ``SimResult[K, B, N]``."""
+        return self._fn(self.bspec, D, S, M, DD, BW, SD, self.clusters)
 
     @property
     def B(self):
@@ -1723,9 +1737,8 @@ class BucketedGridRunner:
                       for p in points], axis=1)
         S = np.stack([self._estimates(p.get("imode", "exact"))[1]
                       for p in points], axis=1)
-        res = self._fn(self.bspec, D, S, M, DD, BW, SD,
-                       self.clusters)
-        _check_ok(res.ok, f"BucketedGridRunner({self.names!r}, "
+        res = self._execute(D, S, M, DD, BW, SD)
+        _check_ok(res.ok, f"{type(self).__name__}({self.names!r}, "
                           f"{self.scheduler!r})", res.overflow)
         ms, xfer = np.asarray(res.makespan), np.asarray(res.transferred)
         if self._single_cluster:

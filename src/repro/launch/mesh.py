@@ -30,8 +30,31 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     n = int(np.prod(shape))
-    devs = np.array(jax.devices()[:n]).reshape(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"force host devices via "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    devs = np.array(devices[:n]).reshape(shape)
     return Mesh(devs, axes)
+
+
+def make_grid_mesh(n: int | None = None) -> Mesh:
+    """1-D mesh over a single ``"grid"`` axis — the sharded survey
+    engine's data-parallel layout (``core.vectorized.engine``,
+    DESIGN.md §9).  ``n=None`` takes every visible device; an explicit
+    ``n`` must fit the device count (force host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    devices = jax.devices()
+    if n is None:
+        n = len(devices)
+    if not 1 <= n <= len(devices):
+        raise RuntimeError(
+            f"need {n} devices for a 1-D grid mesh, have {len(devices)} — "
+            f"force host devices via "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return Mesh(np.array(devices[:n]), ("grid",))
 
 
 def dp_axes(mesh: Mesh):

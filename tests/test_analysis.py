@@ -278,10 +278,11 @@ def test_default_targets_cover_grid():
     names = [t.name for t in default_targets()]
     # 2 static sims + 6 schedulers x 2 netmodels + 5 static bindings
     # + 7 JX106 frontier targets (5 on the cap-nonaliasing T1280 shape,
-    # 2 frontier=off escape-hatch pins)
-    assert len(names) == 26 and len(set(names)) == 26
+    # 2 frontier=off escape-hatch pins) + 1 sharded engine program
+    assert len(names) == 27 and len(set(names)) == 27
     assert sum("frontier@T1280" in n for n in names) == 5
     assert sum("frontier=off" in n for n in names) == 2
+    assert sum(n.startswith("sharded_engine") for n in names) == 1
     # every maxmin target carries the slot-pool bound
     assert sum(t.slot_pool is not None for t in default_targets()) == 12
 

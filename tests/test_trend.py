@@ -1,6 +1,7 @@
 """Trend tool (benchmarks/trend.py): concatenating bench-smoke-results
 artifacts across PRs into one trend CSV + markdown table."""
 import csv
+import json
 import os
 
 from benchmarks import trend
@@ -64,6 +65,40 @@ def test_collect_and_write(tmp_path):
     md = open(md_path).read()
     assert "| pr2 |" in md and "| pr3 |" in md
     assert md.splitlines()[0].startswith("| source |")
+
+
+def test_collect_ingests_bench_records(tmp_path):
+    """Artifacts carrying BENCH_PR7/BENCH_PR8 perf records contribute
+    the throughput trend columns; artifacts without them stay blank."""
+    old = str(tmp_path / "pr6")
+    _write_artifact(old, [1.0, 2.0], [1.0, 1.0], with_bucket_cols=True)
+    new = str(tmp_path / "pr8")
+    _write_artifact(new, [1.0, 2.0], [1.0, 1.0], with_bucket_cols=True)
+    with open(os.path.join(new, "BENCH_PR7.json"), "w") as f:
+        json.dump({"static": {"T2048xO512xE4096":
+                              {"events_per_s_speedup": 2.0}},
+                   "dynamic": {"T2048xO512xE4096":
+                               {"events_per_s_speedup": 8.0}}}, f)
+    with open(os.path.join(new, "BENCH_PR8.json"), "w") as f:
+        json.dump({"workers": {"grid_throughput_x": 4.5}}, f)
+    _rows, summaries = trend.collect([old, new])
+    s_old, s_new = summaries
+    assert s_old["events_speedup"] == "" and s_old["grid_throughput_x"] == ""
+    assert s_new["events_speedup"] == 4.0       # geomean(2, 8)
+    assert s_new["grid_throughput_x"] == 4.5
+    _, md_path = trend.write_trend(_rows, summaries, str(tmp_path / "out"))
+    md = open(md_path).read()
+    assert "grid_throughput_x" in md.splitlines()[0]
+    assert "| 4.0 | 4.5 |" in md
+
+
+def test_bench_summary_tolerates_malformed_records(tmp_path):
+    d = tmp_path / "junk"
+    d.mkdir()
+    (d / "BENCH_PR7.json").write_text("{not json")
+    (d / "BENCH_PR8.json").write_text(json.dumps({"workers": {}}))
+    out = trend.bench_summary(str(d))
+    assert out == {"events_speedup": "", "grid_throughput_x": ""}
 
 
 def test_collect_tolerates_missing_files(tmp_path):
